@@ -1,0 +1,68 @@
+"""§6.1 failure diagnosis (Fig. 15 + Table 3): accuracy of the rule+agent
+pipeline over the Table-3 failure mix with cascaded symptom logs, the
+learning curve (agent -> rules), and log-compression ratio.
+
+Paper claim: the system "reduces manual intervention by around 90%"; our
+proxy: >=90% of failures are auto-diagnosed correctly, and every
+infrastructure failure (auto-recoverable) is routed away from a human.
+"""
+from __future__ import annotations
+
+import random
+
+from benchmarks.common import Row, emit
+from repro.core.ft.diagnosis import FailureDiagnosisSystem
+from repro.core.ft.events import TABLE3, generate_log, sample_failure
+
+
+def run(fast: bool = False) -> list[Row]:
+    n = 60 if fast else 150
+    rng = random.Random(0)
+    sys_ = FailureDiagnosisSystem()
+    correct = 0
+    infra_auto = 0
+    infra_total = 0
+    rule_hits_late = 0
+    results = []
+    for i in range(n):
+        ft = sample_failure(rng)
+        log = generate_log(ft, seed=i, n_normal=300)
+        diag = sys_.diagnose(log)
+        ok = diag.failure == ft.name
+        correct += ok
+        results.append((i, ok, diag.source))
+        if ft.category == "Infrastructure":
+            # the operational claim: the failure is routed to the right
+            # *recovery* (auto-restart, node cordon when needed) without a
+            # human — exact-label accuracy is reported separately. The
+            # paper itself notes its categories overlap (e.g. ECC <-> CUDA).
+            infra_total += 1
+            infra_auto += (diag.auto_recoverable
+                           and diag.needs_node_cordon == ft.needs_node_cordon)
+        if i >= n // 2 and diag.source == "rule":
+            rule_hits_late += 1
+    acc = correct / n
+    late_rule_frac = rule_hits_late / (n - n // 2)
+    comp = sys_.compressor.compression_ratio
+    rows = [
+        Row("diagnosis", "accuracy", acc, ">=0.9 (~90% manual reduction)",
+            "", acc >= 0.9),
+        Row("diagnosis", "infra_auto_recover_frac",
+            infra_auto / max(infra_total, 1), "infra failures auto-routed",
+            "", infra_auto / max(infra_total, 1) >= 0.9),
+        Row("diagnosis", "late_rule_hit_frac", late_rule_frac,
+            "rules learned over time (Fig.15 writeback)", "",
+            late_rule_frac > 0.5),
+        Row("diagnosis", "log_compression_ratio", comp,
+            "hundreds-of-MB logs -> error tail", "x", comp > 20),
+        Row("diagnosis", "n_failures", float(n), "", ""),
+    ]
+    return rows
+
+
+def main(fast: bool = False) -> None:
+    emit(run(fast), "diagnosis")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Appendix A.6 analog: MoE pretraining is communication-bound relative to
+dense — the paper saw much lower GPU utilization for Mixtral-style MoE
+because "the MoE model requires frequent all-to-all communication".
+
+Metric: collective bytes moved per *useful* (active-param) FLOP, from the
+calibrated dry-run artifacts. The MoE archs (gshard expert dispatch + its
+all-to-alls, plus the fatter ZeRO gathers over mostly-inactive expert
+weights) must move several times more bytes per useful FLOP than a dense
+model of similar scale.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Row, emit
+from repro.config import get_arch
+from repro.launch.roofline import model_flops_per_device
+
+ART = "artifacts/dryrun/single"
+
+
+def _comm_per_flop(arch: str) -> tuple[float, float]:
+    with open(os.path.join(ART, arch, "train_4k.json")) as f:
+        rec = json.load(f)
+    cal = rec.get("calibrated", {})
+    coll = cal.get("coll_total",
+                   rec["collectives"]["total_bytes_per_device"])
+    a2a = cal.get("coll_all-to-all", 0.0)
+    mf = model_flops_per_device(get_arch(arch), "train", rec["seq_len"],
+                                rec["global_batch"], rec["n_devices"])
+    return coll / mf, a2a
+
+
+def run(fast: bool = False) -> list[Row]:
+    try:
+        moe_ratio, moe_a2a = _comm_per_flop("deepseek-v2-lite-16b")
+        mix_ratio, mix_a2a = _comm_per_flop("mixtral-8x22b")
+        dense_ratio, _ = _comm_per_flop("nemotron-4-15b")
+    except FileNotFoundError:
+        return [Row("moe_comm", "skipped_no_dryrun_artifacts", 0.0,
+                    "run repro.launch.dryrun --calibrate first", "", None)]
+    rows = [
+        Row("moe_comm", "deepseek_coll_bytes_per_useful_flop", moe_ratio,
+            "", "B/flop"),
+        Row("moe_comm", "mixtral_coll_bytes_per_useful_flop", mix_ratio,
+            "", "B/flop"),
+        Row("moe_comm", "dense_coll_bytes_per_useful_flop", dense_ratio,
+            "", "B/flop"),
+        Row("moe_comm", "deepseek_over_dense", moe_ratio / dense_ratio,
+            "MoE comm-heavier per useful FLOP (A.6)", "x",
+            moe_ratio / dense_ratio > 1.5),
+        Row("moe_comm", "mixtral_over_dense", mix_ratio / dense_ratio,
+            "MoE comm-heavier per useful FLOP (A.6)", "x",
+            mix_ratio / dense_ratio > 1.5),
+        Row("moe_comm", "deepseek_a2a_gib_per_step", moe_a2a / 2 ** 30,
+            "expert-dispatch all-to-all present", "GiB", moe_a2a > 0),
+    ]
+    return rows
+
+
+def main(fast: bool = False) -> None:
+    emit(run(fast), "moe_comm")
+
+
+if __name__ == "__main__":
+    main()

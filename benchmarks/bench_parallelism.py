@@ -1,0 +1,105 @@
+"""Fig. 10/11 analog: InternEvo V1 (global ZeRO-3 gathers) vs V2
+(hierarchical ZeRO bounded to a pod) on the paper's 123B model, multi-pod
+mesh — compared via compiled collective traffic and memory (the dry-run
+"profile"; the paper reports ~16% step acceleration and lower activation
+memory for V2).
+
+The paper's mechanism: bound the parameter-gather group so all-gathers stay
+on fast intra-pod links and only gradient reduction crosses pods. In GSPMD
+terms: fsdp axes (pod, data) -> (data).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from benchmarks.common import Row, emit
+
+CACHE = "artifacts/bench/parallelism_cells.json"
+
+
+def _measure():
+    # run in a subprocess-like late import so the 512-device XLA flag is
+    # only forced when this benchmark actually executes
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    from repro.launch.dryrun import default_parallel, lower_cell
+    from repro.launch.hlo_analysis import analyze, classify_collectives
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.shapes import SHAPES
+
+    mesh = make_production_mesh(multi_pod=True)
+    pod_boundary = mesh.devices.size // mesh.shape["pod"]
+    out = {}
+    for name, zero in (("v1_global_zero3", "zero3"),
+                       ("v2_hier_zero3", "zero3_hier")):
+        # bf16 grads for both: the fp32 gradient all-reduce otherwise
+        # dominates cross-pod bytes equally on each side and masks the
+        # param-gather locality difference (the paper's actual mechanism)
+        par = dataclasses.replace(default_parallel("internlm-123b", mesh),
+                                  zero=zero, grad_dtype="bfloat16")
+        lowered = lower_cell("internlm-123b", SHAPES["train_4k"], mesh,
+                             parallel=par)
+        compiled = lowered.compile()
+        a = analyze(compiled)
+        cls = classify_collectives(compiled.as_text(), pod_boundary)
+        out[name] = {
+            "coll_bytes_per_dev": a["collectives"]["total_bytes_per_device"],
+            "bytes_by_op": a["collectives"]["bytes_by_op"],
+            "cross_pod_bytes": cls["cross_pod_bytes"],
+            "pod_local_bytes": cls["pod_local_bytes"],
+            "temp_gib": a["memory"].get("temp_size_in_bytes", 0) / 2 ** 30,
+            "args_gib": a["memory"].get("argument_size_in_bytes", 0) / 2 ** 30,
+        }
+    return out
+
+
+def run(fast: bool = False) -> list[Row]:
+    if fast and os.path.exists(CACHE):
+        cells = json.load(open(CACHE))
+    else:
+        cells = _measure()
+        os.makedirs(os.path.dirname(CACHE), exist_ok=True)
+        json.dump(cells, open(CACHE, "w"), indent=1)
+    v1, v2 = cells["v1_global_zero3"], cells["v2_hier_zero3"]
+    # cross-pod DCN is the scarce resource (the paper's single-IB-NIC pain):
+    # hierarchical ZeRO bounds the param gathers to a pod, so its win shows
+    # up as cross-pod bytes, not total bytes (intra-pod ICI is cheap).
+    red = v1["cross_pod_bytes"] / max(v2["cross_pod_bytes"], 1.0)
+    # headline: the share of collective traffic that stays on fast intra-pod
+    # ICI. V2's parameter gathers are pod-bounded by construction; the
+    # residual cross-pod bytes (batch/loss reductions) are identical on both
+    # sides, so the SHARE is the clean signal in this scan-once proxy.
+    lf1 = v1["pod_local_bytes"] / (v1["pod_local_bytes"]
+                                   + v1["cross_pod_bytes"])
+    lf2 = v2["pod_local_bytes"] / (v2["pod_local_bytes"]
+                                   + v2["cross_pod_bytes"])
+    rows = [
+        Row("parallelism", "v1_pod_local_traffic_share", lf1, "", ""),
+        Row("parallelism", "v2_pod_local_traffic_share", lf2,
+            "hierarchical ZeRO keeps gathers on intra-pod links "
+            "(Fig.10 V2, ~16% step win)", "", lf2 > lf1 + 0.1),
+        Row("parallelism", "v1_cross_pod_gib_per_dev",
+            v1["cross_pod_bytes"] / 2 ** 30, "", "GiB"),
+        Row("parallelism", "v2_cross_pod_gib_per_dev",
+            v2["cross_pod_bytes"] / 2 ** 30,
+            "no higher than V1 despite 2x gather redundancy", "GiB",
+            v2["cross_pod_bytes"] <= v1["cross_pod_bytes"] * 1.05),
+        Row("parallelism", "v1_pod_local_gib", v1["pod_local_bytes"] / 2 ** 30,
+            "", "GiB"),
+        Row("parallelism", "v2_pod_local_gib", v2["pod_local_bytes"] / 2 ** 30,
+            "gathers moved onto intra-pod ICI", "GiB",
+            v2["pod_local_bytes"] > v1["pod_local_bytes"]),
+        Row("parallelism", "v1_temp_gib", v1["temp_gib"], "", "GiB"),
+        Row("parallelism", "v2_temp_gib", v2["temp_gib"],
+            "memory/locality trade (Fig.11)", "GiB"),
+    ]
+    return rows
+
+
+def main(fast: bool = False) -> None:
+    emit(run(fast), "parallelism")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""§Roofline: per-(arch x shape) three-term roofline from the dry-run
+artifacts; identifies the dominant bottleneck per cell."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import Row, emit
+from repro.launch.roofline import HEADER, full_table
+
+
+def run(fast: bool = False) -> list[Row]:
+    table = full_table()
+    if not table:
+        return [Row("roofline", "skipped_no_dryrun_artifacts", 0.0,
+                    "run repro.launch.dryrun --calibrate first", "", None)]
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/roofline.csv", "w") as f:
+        f.write(HEADER + "\n")
+        for r in table:
+            f.write(r.row() + "\n")
+    rows = [Row("roofline", "n_cells", float(len(table)), "35 runnable", "",
+                len(table) >= 30)]
+    by_dom = {}
+    for r in table:
+        by_dom[r.dominant] = by_dom.get(r.dominant, 0) + 1
+    for dom, n in sorted(by_dom.items()):
+        rows.append(Row("roofline", f"cells_dominated_by_{dom}", float(n),
+                        "", ""))
+    worst = min(table, key=lambda r: r.roofline_frac)
+    best = max(table, key=lambda r: r.roofline_frac)
+    rows += [
+        Row("roofline", f"worst_frac[{worst.arch}/{worst.shape}]",
+            worst.roofline_frac, "", ""),
+        Row("roofline", f"best_frac[{best.arch}/{best.shape}]",
+            best.roofline_frac, "", ""),
+    ]
+    return rows
+
+
+def main(fast: bool = False) -> None:
+    emit(run(fast), "roofline")
+
+
+if __name__ == "__main__":
+    main()

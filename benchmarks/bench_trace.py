@@ -1,0 +1,59 @@
+"""§3 characterization (Fig. 2/3/4/5/6/17): the synthetic Acme trace must
+reproduce the paper's headline statistics."""
+from __future__ import annotations
+
+from benchmarks.common import Row, emit
+from repro.cluster import KALOS, generate_jobs, simulate_queue, trace_summary
+
+HORIZON = 6 * 30 * 24 * 60.0
+
+
+def run(fast: bool = False) -> list[Row]:
+    jobs = generate_jobs(KALOS, seed=0,
+                         n_jobs=8000 if fast else None)
+    jobs = simulate_queue(jobs, KALOS.n_gpus, reserved_frac=0.97)
+    s = trace_summary(jobs, KALOS.n_gpus, HORIZON)
+    ts, d, q, st = (s["type_shares"], s["demand"], s["queue"], s["status"])
+    med = s["duration"]["median_min"]
+    rows = [
+        Row("trace", "median_job_duration_min", med, "~2 (Fig.2a)", "min",
+            0.8 <= med <= 3.5),
+        Row("trace", "eval_count_frac", ts["evaluation"]["count_frac"],
+            "0.929 (Fig.4c)", "",
+            abs(ts["evaluation"]["count_frac"] - 0.929) < 0.01),
+        Row("trace", "eval_gputime_frac", ts["evaluation"]["gputime_frac"],
+            "0.008 (Fig.4d)", "", ts["evaluation"]["gputime_frac"] < 0.02),
+        Row("trace", "pretrain_count_frac", ts["pretrain"]["count_frac"],
+            "0.032 (Fig.4c)", "",
+            abs(ts["pretrain"]["count_frac"] - 0.032) < 0.006),
+        Row("trace", "pretrain_gputime_frac", ts["pretrain"]["gputime_frac"],
+            "0.940 (Fig.4d)", "", ts["pretrain"]["gputime_frac"] > 0.90),
+        Row("trace", "gputime_frac_ge256gpu", d["gputime_frac_ge256"],
+            ">0.96 (Fig.3b)", "", d["gputime_frac_ge256"] > 0.88),
+        Row("trace", "gputime_frac_single_gpu", d["gputime_frac_single_gpu"],
+            "<0.02 (Fig.3b)", "", d["gputime_frac_single_gpu"] < 0.02),
+        Row("trace", "eval_median_queue_min",
+            q["evaluation"]["median_min"], "longest of all types (Fig.6d)",
+            "min",
+            all(q["evaluation"]["median_min"] >= v["median_min"]
+                for v in q.values())),
+        Row("trace", "pretrain_median_queue_min",
+            q["pretrain"]["median_min"], "~0 (reservation)", "min",
+            q["pretrain"]["median_min"] < 1.0),
+        Row("trace", "failed_count_frac", st["failed"]["count_frac"],
+            "~0.40 (Fig.17a)", "",
+            abs(st["failed"]["count_frac"] - 0.40) < 0.05),
+        Row("trace", "failed_gputime_frac", st["failed"]["gputime_frac"],
+            "~0.10 (Fig.17b)", "", st["failed"]["gputime_frac"] < 0.25),
+        Row("trace", "canceled_gputime_frac", st["canceled"]["gputime_frac"],
+            ">0.60 (Fig.17b)", "", st["canceled"]["gputime_frac"] > 0.5),
+    ]
+    return rows
+
+
+def main(fast: bool = False) -> None:
+    emit(run(fast), "trace")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Benchmark plumbing: result rows + artifact output."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Optional
+
+ARTIFACTS = os.environ.get("REPRO_BENCH_DIR", "artifacts/bench")
+
+
+@dataclasses.dataclass
+class Row:
+    bench: str
+    metric: str
+    value: float
+    target: Optional[str] = None       # the paper's figure/claim, as text
+    unit: str = ""
+    ok: Optional[bool] = None          # within-band verdict when checkable
+
+    def line(self) -> str:
+        tgt = self.target or ""
+        oks = "" if self.ok is None else ("PASS" if self.ok else "MISS")
+        return (f"{self.bench},{self.metric},{self.value:.6g},{self.unit},"
+                f"{tgt},{oks}")
+
+
+def emit(rows: list[Row], name: str) -> None:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    print(f"# --- {name} " + "-" * max(0, 60 - len(name)))
+    print("bench,metric,value,unit,paper_target,verdict")
+    for r in rows:
+        print(r.line())
+    with open(os.path.join(ARTIFACTS, f"{name}.json"), "w") as f:
+        json.dump([dataclasses.asdict(r) for r in rows], f, indent=1)

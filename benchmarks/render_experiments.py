@@ -1,0 +1,70 @@
+"""Render §Dry-run and §Roofline markdown tables from the artifacts.
+
+  PYTHONPATH=src python -m benchmarks.render_experiments > artifacts/tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.roofline import cell_roofline, load_cells
+
+
+def dryrun_table(mesh: str) -> str:
+    cells = load_cells(f"artifacts/dryrun/{mesh}")
+    out = [f"### {mesh} mesh ({'2x16x16' if mesh == 'multi' else '16x16'})",
+           "",
+           "| arch | shape | status | lower s | compile s | args/dev | "
+           "temp/dev | HLO flops/dev (scan-once) | coll bytes/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in cells:
+        if r.get("status") != "ok":
+            continue
+        mem = r.get("memory", {})
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r.get('lower_s', 0):.1f} "
+            f"| {r.get('compile_s', 0):.1f} "
+            f"| {mem.get('argument_size_in_bytes', 0) / 2**30:.2f} GiB "
+            f"| {mem.get('temp_size_in_bytes', 0) / 2**30:.2f} GiB "
+            f"| {r.get('cost', {}).get('flops', 0):.3e} "
+            f"| {r['collectives']['total_bytes_per_device'] / 2**30:.2f} GiB |")
+    return "\n".join(out)
+
+
+def roofline_table() -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO flops | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for rec in load_cells("artifacts/dryrun/single"):
+        r = cell_roofline(rec)
+        if r is None:
+            continue
+        out.append(f"| {r.arch} | {r.shape} | {r.compute_s:.3e} "
+                   f"| {r.memory_s:.3e} | {r.collective_s:.3e} "
+                   f"| **{r.dominant}** | {r.useful_ratio:.2f} "
+                   f"| {r.roofline_frac:.3f} |")
+    return "\n".join(out)
+
+
+def skip_table() -> str:
+    return "\n".join([
+        "| arch | shape | reason |", "|---|---|---|",
+        *(f"| {a} | long_500k | pure full-attention decode state at 500k "
+          "is unbounded |"
+          for a in ("smollm-360m", "nemotron-4-15b", "internvl2-2b",
+                    "whisper-large-v3", "deepseek-v2-lite-16b"))])
+
+
+def main() -> None:
+    print("## Dry-run matrix\n")
+    print(dryrun_table("single"))
+    print()
+    print(dryrun_table("multi"))
+    print("\n### Skipped cells (5 per mesh)\n")
+    print(skip_table())
+    print("\n## Roofline (single pod, calibrated)\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

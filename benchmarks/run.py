@@ -1,0 +1,51 @@
+"""Benchmark runner: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (bench_checkpoint, bench_detection, bench_diagnosis,
+                        bench_evalsched, bench_moe_comm, bench_recovery,
+                        bench_roofline, bench_trace)
+from benchmarks.common import emit
+
+BENCHES = {
+    "trace": bench_trace,              # §3, Fig. 2/3/4/6/17
+    "checkpoint": bench_checkpoint,    # §6.1 async ckpt 3.6~58.7x
+    "diagnosis": bench_diagnosis,      # §6.1 Fig. 15, Table 3, ~90%
+    "detection": bench_detection,      # §6.1 two-round sweep
+    "evalsched": bench_evalsched,      # §6.2 Fig. 16, 1.3x/1.8x
+    "recovery": bench_recovery,        # §5.3 / Fig. 14
+    "moe_comm": bench_moe_comm,        # Appendix A.6
+    "roofline": bench_roofline,        # §Roofline (dry-run artifacts)
+}
+# heavyweight (forces 512 XLA host devices; run explicitly):
+#   python -m benchmarks.bench_parallelism   # Fig. 10/11 V1-vs-V2
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = []
+    for name, mod in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            emit(mod.run(args.fast), name)
+            print(f"# {name} done in {time.time() - t0:.1f}s\n")
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            print(f"# {name} FAILED:\n{traceback.format_exc()}")
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""§6.2 end-to-end: decoupled evaluation scheduling.
+
+Part 1 — the calibrated cluster simulator reproduces the paper's makespan
+reductions (1.3x on 1 node, 1.8x on 4 nodes) on the 63-dataset suite.
+Part 2 — a *real* threaded mini-evaluation (actual JAX inference, throttled
+remote weight loading, subprocess-style metric jobs) shows the same effect
+in wall-clock time on this machine.
+
+  PYTHONPATH=src python examples/decoupled_eval.py
+"""
+import jax
+
+from repro.config import get_smoke
+from repro.core.evalsched import (ClusterSpec, schedule_baseline,
+                                  schedule_decoupled, standard_suite)
+from repro.core.evalsched.runner import (RemoteStore, make_suite,
+                                         run_baseline, run_decoupled)
+from repro.models import Model
+
+
+def main() -> None:
+    print("=== simulated 63-dataset / 7B evaluation (paper Fig. 16) ===")
+    suite = standard_suite(63)
+    for nodes in (1, 4):
+        spec = ClusterSpec(n_nodes=nodes)
+        b = schedule_baseline(suite, spec)
+        d = schedule_decoupled(suite, spec)
+        print(f"  {nodes} node(s): baseline {b.makespan:5.1f} min "
+              f"(gpu util {b.gpu_utilization:.0%})  decoupled "
+              f"{d.makespan:5.1f} min (util {d.gpu_utilization:.0%})  "
+              f"speedup {b.makespan / d.makespan:.2f}x")
+
+    print("\n=== real threaded mini-evaluation on this machine ===")
+    cfg = get_smoke("internlm-7b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    store = RemoteStore(params, bandwidth_mbps=4.0)
+    mini = make_suite(model, n_datasets=10, heavy_tail=0.6)
+    try:
+        base = run_baseline(model, store, mini, n_workers=2,
+                            warm_params=params)
+        dec = run_decoupled(model, store, mini, n_workers=2,
+                            warm_params=params)
+    finally:
+        store.close()
+    print(f"  baseline : {base.makespan_s:5.2f}s "
+          f"(worker time: load {base.per_stage['load']:.2f}s, "
+          f"infer {base.per_stage['infer']:.2f}s, "
+          f"metric-held {base.per_stage['metric']:.2f}s)")
+    print(f"  decoupled: {dec.makespan_s:5.2f}s "
+          f"(one precursor load {dec.per_stage['load']:.2f}s, "
+          f"metrics on CPU pool)")
+    print(f"  speedup  : {base.makespan_s / dec.makespan_s:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

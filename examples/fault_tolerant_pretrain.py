@@ -1,0 +1,70 @@
+"""§6.1 end-to-end: fault-tolerant pretraining on a real JAX training loop.
+
+Injects two Table-3 infrastructure failures and a loss spike into a smoke-
+scale smollm run. The supervisor diagnoses each failure from its synthetic
+runtime log (rule+agent pipeline), runs the two-round allgather sweep to
+cordon the faulty node, restarts from the freshest (in-RAM) checkpoint, and
+on the spike rolls back to an earlier checkpoint while skipping the
+poisoned batches. Training completes unattended.
+
+  PYTHONPATH=src python examples/fault_tolerant_pretrain.py
+"""
+import tempfile
+
+from repro.config import ParallelConfig, TrainConfig, get_smoke
+from repro.core.ft.checkpoint import CheckpointManager
+from repro.core.ft.detection import SimulatedFleet
+from repro.core.ft.diagnosis import FailureDiagnosisSystem
+from repro.core.ft.events import BY_NAME
+from repro.core.ft.supervisor import Supervisor
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import Trainer
+from repro.models import Model
+from repro.sharding import make_rules
+
+STEPS = 90
+
+
+def main() -> None:
+    cfg = get_smoke("smollm-360m")
+    mesh = make_host_mesh()
+    parallel = ParallelConfig(remat="none", moe_impl="dense")
+    tcfg = TrainConfig(global_batch=4, seq_len=64, total_steps=STEPS,
+                       warmup_steps=5, learning_rate=1e-3)
+    model = Model(cfg, parallel, make_rules(mesh, parallel))
+
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = CheckpointManager(d, keep=4)
+        trainer = Trainer(
+            model, tcfg, mesh, parallel, ckpt, total_steps=STEPS,
+            ckpt_every=10, log_every=15,
+            fault_schedule={30: BY_NAME["NVLinkError"],
+                            60: BY_NAME["ConnectionError"]},
+            spike_schedule={45 + i: 6.0 for i in range(6)})
+        fleet = SimulatedFleet(8)
+        supervisor = Supervisor(ckpt, FailureDiagnosisSystem(), fleet)
+        report = supervisor.run(trainer.job)
+        ckpt.wait()
+
+    print("\n=== supervisor report ===")
+    for e in report.events:
+        if e.kind == "failure":
+            print(f"  step {e.step}: {e.diagnosis.failure} "
+                  f"({e.diagnosis.source}, truth={e.truth}) "
+                  f"-> resumed from {e.resumed_from}"
+                  + (f", cordoned {e.detection.faulty} in "
+                     f"{e.detection.probes} probes" if e.detection else ""))
+        elif e.kind == "spike":
+            print(f"  step {e.step}: loss spike -> rollback to "
+                  f"{e.resumed_from}, data skipped")
+    losses = [l for _, l in trainer.history]
+    print(f"completed={report.completed} attempts={report.attempts} "
+          f"auto={report.auto_recoveries} manual={report.manual_interventions}")
+    print(f"lost steps: {report.lost_steps}; loss {losses[0]:.3f} -> "
+          f"{losses[-1]:.3f}")
+    print(f"cordoned nodes: {sorted(fleet.cordoned)}")
+    assert report.completed and report.manual_interventions == 0
+
+
+if __name__ == "__main__":
+    main()

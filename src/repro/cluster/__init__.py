@@ -1,0 +1,8 @@
+"""Simulated datacenter: workload generator, scheduler, trace analysis (§3)."""
+from repro.cluster.workload import (JobRecord, WorkloadSpec, KALOS, SEREN,
+                                    generate_jobs)
+from repro.cluster.scheduler import ReservationScheduler, simulate_queue
+from repro.cluster.analysis import trace_summary
+
+__all__ = ["JobRecord", "WorkloadSpec", "KALOS", "SEREN", "generate_jobs",
+           "ReservationScheduler", "simulate_queue", "trace_summary"]

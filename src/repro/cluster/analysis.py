@@ -1,0 +1,118 @@
+"""Trace analysis: recompute the paper's §3 headline statistics.
+
+One function per figure/claim; ``trace_summary`` bundles them for the
+benchmark harness (benchmarks/bench_trace.py) which checks them against the
+paper's reported values.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Iterable
+
+import numpy as np
+
+from repro.cluster.workload import JobRecord
+
+
+def _median(xs) -> float:
+    return float(np.median(np.asarray(list(xs), dtype=np.float64))) if xs else 0.0
+
+
+def duration_stats(jobs: list[JobRecord]) -> dict:
+    """Fig. 2a: GPU job duration distribution."""
+    d = np.array([j.duration_min for j in jobs])
+    return {
+        "median_min": float(np.median(d)),
+        "mean_min": float(np.mean(d)),
+        "p95_min": float(np.percentile(d, 95)),
+        "frac_over_1day": float(np.mean(d > 1440.0)),
+    }
+
+
+def type_shares(jobs: list[JobRecord]) -> dict:
+    """Fig. 4: job count share and GPU-time share per workload type."""
+    count = collections.Counter(j.jtype for j in jobs)
+    gpu_time = collections.defaultdict(float)
+    for j in jobs:
+        gpu_time[j.jtype] += j.gpu_time
+    n = len(jobs)
+    total = sum(gpu_time.values()) or 1.0
+    return {t: {"count_frac": count[t] / n,
+                "gputime_frac": gpu_time[t] / total}
+            for t in count}
+
+
+def demand_stats(jobs: list[JobRecord]) -> dict:
+    """Fig. 3/5: GPU-demand distribution overall and per type."""
+    by_type = collections.defaultdict(list)
+    for j in jobs:
+        by_type[j.jtype].append(j.gpus)
+    gpus = np.array([j.gpus for j in jobs])
+    gpu_time = np.array([j.gpu_time for j in jobs])
+    big = gpus >= 256
+    single = gpus <= 1
+    return {
+        "median_by_type": {t: _median(v) for t, v in by_type.items()},
+        "frac_jobs_single_gpu": float(np.mean(single)),
+        "frac_jobs_ge8": float(np.mean(gpus > 8)),
+        "gputime_frac_single_gpu": float(gpu_time[single].sum() / gpu_time.sum()),
+        "gputime_frac_ge256": float(gpu_time[big].sum() / gpu_time.sum()),
+        "mean_gpus": float(np.mean(gpus)),
+    }
+
+
+def queue_stats(jobs: list[JobRecord]) -> dict:
+    """Fig. 6: queueing delay per type (needs simulate_queue first)."""
+    by_type = collections.defaultdict(list)
+    for j in jobs:
+        by_type[j.jtype].append(j.queue_min)
+    return {t: {"median_min": _median(v),
+                "mean_min": float(np.mean(v))}
+            for t, v in by_type.items()}
+
+
+def status_stats(jobs: list[JobRecord]) -> dict:
+    """Fig. 17: final status shares by count and GPU time."""
+    count = collections.Counter(j.status for j in jobs)
+    gpu_time = collections.defaultdict(float)
+    for j in jobs:
+        gpu_time[j.status] += j.gpu_time
+    n = len(jobs)
+    total = sum(gpu_time.values()) or 1.0
+    return {s: {"count_frac": count[s] / n,
+                "gputime_frac": gpu_time[s] / total}
+            for s in count}
+
+
+def utilization_profile(jobs: list[JobRecord], n_gpus: int,
+                        horizon_min: float) -> dict:
+    """Fig. 2b-adjacent: time-averaged cluster GPU allocation."""
+    # sweep-line over start/finish events
+    events = []
+    for j in jobs:
+        start = j.submit_min + j.queue_min
+        events.append((start, j.gpus))
+        events.append((start + j.duration_min, -j.gpus))
+    events.sort()
+    t_prev, used, acc = 0.0, 0, 0.0
+    peak = 0
+    for t, delta in events:
+        acc += used * (t - t_prev)
+        t_prev = t
+        used += delta
+        peak = max(peak, used)
+    return {"mean_allocation_frac": acc / (n_gpus * horizon_min),
+            "peak_allocation": peak}
+
+
+def trace_summary(jobs: list[JobRecord], n_gpus: int,
+                  horizon_min: float) -> dict:
+    return {
+        "n_jobs": len(jobs),
+        "duration": duration_stats(jobs),
+        "type_shares": type_shares(jobs),
+        "demand": demand_stats(jobs),
+        "queue": queue_stats(jobs),
+        "status": status_stats(jobs),
+        "utilization": utilization_profile(jobs, n_gpus, horizon_min),
+    }

@@ -1,0 +1,19 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own).
+
+Importing this package registers every ``--arch <id>`` name. Each module
+defines ``build()`` (the exact published config) and ``smoke()`` (a reduced
+same-family config that runs a forward/train step on CPU).
+"""
+from repro.configs import (deepseek_v2_lite_16b, gemma3_27b, h2o_danube_1_8b,
+                           internlm_123b, internlm_7b, internvl2_2b,
+                           jamba_1_5_large_398b, mamba2_1_3b, mixtral_8x22b,
+                           nemotron_4_15b, smollm_360m, whisper_large_v3)
+
+# the ten assigned architectures (pool ids)
+ASSIGNED = (
+    "gemma3-27b", "smollm-360m", "h2o-danube-1.8b", "nemotron-4-15b",
+    "internvl2-2b", "mamba2-1.3b", "whisper-large-v3", "mixtral-8x22b",
+    "deepseek-v2-lite-16b", "jamba-1.5-large-398b",
+)
+# the paper's own model family (InternLM — §2.2, Fig. 10/14)
+PAPER = ("internlm-7b", "internlm-123b")

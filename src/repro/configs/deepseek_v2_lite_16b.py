@@ -1,0 +1,38 @@
+"""deepseek-v2-lite-16b [moe]: 27L, d_model 2048, 16H MLA (kv_lora 512,
+qk_rope 64, qk_nope 128, v_head 128), vocab 102400; first layer dense
+(d_ff 10944), the rest MoE with 64 routed experts (expert_ff 1408, top-6)
+plus 2 shared experts.
+
+Pool-spec note: the pool line says both "64e top-6" and "2 shared+160
+routed"; 160 routed is DeepSeek-V2-*236B*. We follow the published V2-Lite
+config (64 routed) and record the discrepancy in DESIGN.md. MLA's decode
+cache is the 512-d latent + rope key — full attention over it -> long_500k
+skipped. [arXiv:2405.04434; hf]
+"""
+from repro.config import (AttentionConfig, ModelConfig, MoEConfig,
+                          register_arch)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-smoke", family="moe", num_layers=3, d_model=128,
+        d_ff=0, vocab_size=512, max_seq_len=256,
+        attention=AttentionConfig(kind="mla", num_heads=4, num_kv_heads=4,
+                                  kv_lora_rank=32, qk_nope_dim=16,
+                                  qk_rope_dim=8, v_head_dim=16),
+        moe=MoEConfig(num_experts=4, num_shared_experts=1, top_k=2,
+                      expert_ff=64, first_k_dense=1, first_dense_ff=256),
+        vocab_pad_multiple=64)
+
+
+@register_arch("deepseek-v2-lite-16b", smoke=smoke)
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-lite-16b", family="moe", num_layers=27,
+        d_model=2048, d_ff=0, vocab_size=102400, max_seq_len=32768,
+        attention=AttentionConfig(kind="mla", num_heads=16, num_kv_heads=16,
+                                  kv_lora_rank=512, qk_nope_dim=128,
+                                  qk_rope_dim=64, v_head_dim=128),
+        moe=MoEConfig(num_experts=64, num_shared_experts=2, top_k=6,
+                      expert_ff=1408, first_k_dense=1,
+                      first_dense_ff=10944))

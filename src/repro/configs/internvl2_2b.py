@@ -1,0 +1,26 @@
+"""internvl2-2b [vlm]: InternLM2-1.8B backbone — 24L, d_model 2048, 16H
+GQA(kv8), d_ff 8192, vocab 92553. The InternViT vision frontend is a STUB:
+``input_specs()`` supplies 256 precomputed patch embeddings (448px / 14px
+patches, 4x pixel-shuffle) prepended to the text sequence. Full attention ->
+long_500k skipped. [arXiv:2404.16821; hf]
+"""
+from repro.config import AttentionConfig, ModelConfig, register_arch
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-smoke", family="vlm", num_layers=2, d_model=128,
+        d_ff=384, vocab_size=512, max_seq_len=256, frontend="patch_stub",
+        num_patches=8,
+        attention=AttentionConfig(num_heads=8, num_kv_heads=4, head_dim=16),
+        vocab_pad_multiple=64)
+
+
+@register_arch("internvl2-2b", smoke=smoke)
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-2b", family="vlm", num_layers=24, d_model=2048,
+        d_ff=8192, vocab_size=92553, max_seq_len=32768,
+        frontend="patch_stub", num_patches=256,
+        attention=AttentionConfig(num_heads=16, num_kv_heads=8,
+                                  head_dim=128))

@@ -1,0 +1,29 @@
+"""whisper-large-v3 [audio]: encoder-decoder, 32L each side, d_model 1280,
+20H MHA (kv20), d_ff 5120, vocab 51866. The conv frontend is a STUB:
+``input_specs()`` supplies the 1500 precomputed frame embeddings; the
+decoder uses learned positions + cross-attention into the encoder output.
+Full-attention decoder (and a native target length far below 500k) ->
+long_500k skipped. [arXiv:2212.04356; unverified]
+"""
+from repro.config import AttentionConfig, ModelConfig, register_arch
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-smoke", family="audio", num_layers=2, d_model=96,
+        d_ff=256, vocab_size=512, max_seq_len=128, encoder_layers=2,
+        encoder_seq=24, frontend="audio_stub", mlp_act="gelu",
+        attention=AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=24,
+                                  use_rope=False),
+        vocab_pad_multiple=64)
+
+
+@register_arch("whisper-large-v3", smoke=smoke)
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3", family="audio", num_layers=32,
+        d_model=1280, d_ff=5120, vocab_size=51866, max_seq_len=32768,
+        encoder_layers=32, encoder_seq=1500, frontend="audio_stub",
+        mlp_act="gelu",
+        attention=AttentionConfig(num_heads=20, num_kv_heads=20,
+                                  head_dim=64, use_rope=False))

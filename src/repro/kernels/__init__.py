@@ -1,0 +1,13 @@
+# Pallas TPU kernels for the compute hot-spots the paper's framework
+# optimizes (InternEvo ships FlashAttention + fused norms; SSD covers the
+# mamba-family assigned archs). Each kernel: kernel.py (pl.pallas_call +
+# BlockSpec) + ops.py (jit wrapper) + ref.py (pure-jnp oracle).
+from repro.kernels import runtime
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.rmsnorm import rmsnorm as rmsnorm_kernel
+from repro.kernels.rmsnorm import rmsnorm_ref
+from repro.kernels.ssd import ssd as ssd_kernel
+from repro.kernels.ssd import ssd_ref
+
+__all__ = ["runtime", "flash_attention", "flash_attention_ref",
+           "rmsnorm_kernel", "rmsnorm_ref", "ssd_kernel", "ssd_ref"]

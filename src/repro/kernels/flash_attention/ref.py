@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash-attention Pallas kernel.
+
+Materializes the full (Sq, Skv) score matrix in fp32 — O(S^2) memory, only
+for validation at test shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        q_positions: jax.Array, kv_positions: jax.Array,
+                        *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0) -> jax.Array:
+    """Same layout as the kernel: q (B, H, Sq, D); k, v (B, KV, Skv, D)."""
+    B, H, Sq, D = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, D).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32))
+    s = s * (D ** -0.5)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = q_positions[:, None, None, :, None]
+    kv_pos = kv_positions[:, None, None, None, :]
+    ok = kv_pos >= 0
+    if causal:
+        ok &= kv_pos <= q_pos
+    if window > 0:
+        ok &= (q_pos - kv_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+    p = jnp.where(ok, jax.nn.softmax(s, axis=-1), 0.0)  # masked rows -> 0
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, Sq, D).astype(q.dtype)

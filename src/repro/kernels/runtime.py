@@ -1,0 +1,35 @@
+"""Kernel dispatch switch.
+
+``ParallelConfig.use_pallas`` enables the Pallas fast path; on this CPU
+container the kernels run in interpret mode (bit-accurate body execution),
+on TPU they compile to Mosaic. The pure-jnp implementations remain the
+default (and the oracles).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+
+@dataclasses.dataclass
+class _State:
+    use_pallas: bool = False
+    interpret: bool = True      # CPU container: interpret; TPU: False
+
+
+STATE = _State()
+
+
+def configure(use_pallas: bool, interpret: bool = True) -> None:
+    STATE.use_pallas = use_pallas
+    STATE.interpret = interpret
+
+
+@contextlib.contextmanager
+def pallas_enabled(interpret: bool = True):
+    prev = (STATE.use_pallas, STATE.interpret)
+    STATE.use_pallas, STATE.interpret = True, interpret
+    try:
+        yield
+    finally:
+        STATE.use_pallas, STATE.interpret = prev

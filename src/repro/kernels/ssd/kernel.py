@@ -1,0 +1,108 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan (arXiv:2405.21060).
+
+TPU adaptation of the SSD algorithm: per (batch, head) the sequence is cut
+into chunks; each chunk does an intra-chunk quadratic "attention-like" pass
+(two MXU matmuls over (chunk x chunk) tiles) plus an inter-chunk rank-1
+state recurrence. The chunk axis is the innermost grid dimension with
+sequential ("arbitrary") semantics so the (P, N) state lives in VMEM scratch
+across chunk visits — the TPU analogue of the CUDA kernel's persistent
+shared-memory accumulator.
+
+Inputs follow the oracle's layout (repro.models.mamba.ssd_chunked):
+  x  (B, L, H, P)    dt (B, L, H)  [already softplus'd]
+  A  (H,) negative   Bm/Cm (B, L, G, N), heads grouped H % G == 0
+Grid: (B, H, L // chunk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, s_scr, *,
+            num_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (cl, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # (cl,)
+    A = a_ref[0].astype(jnp.float32)                   # scalar
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)         # (cl, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)         # (cl, N)
+
+    dA = dt * A                                        # (cl,), <= 0
+    cum = jnp.cumsum(dA)                               # (cl,)
+
+    # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) dt_j (C_i.B_j) x_j
+    cl = x.shape[0]
+    seg = cum[:, None] - cum[None, :]                  # (i, j)
+    tri = jnp.tril(jnp.ones((cl, cl), jnp.bool_))
+    # mask inside exp: keeps the (interpret-mode) backward pass NaN-free
+    decay = jnp.exp(jnp.where(tri, seg, -jnp.inf))
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    W = scores * decay * dt[None, :]                   # (i, j)
+    y = jax.lax.dot(W, x, preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_i += exp(cum_i) C_i . S_prev
+    S_prev = s_scr[...]                                # (P, N) fp32
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, S_prev, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # state update: S = exp(cum_end) S_prev + sum_j e^{cum_end-cum_j} dt_j x_j B_j^T
+    w_state = jnp.exp(cum[-1] - cum) * dt              # (cl,)
+    S_new = jnp.exp(cum[-1]) * S_prev + jax.lax.dot_general(
+        x * w_state[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_scr[...] = S_new
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == num_chunks - 1)
+    def _final():
+        state_ref[0, 0] = S_new.astype(state_ref.dtype)
+
+
+def ssd_pallas(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+               Cm: jax.Array, *, chunk: int = 128,
+               interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B, L, H, P), final_state (B, H, P, N)). L % chunk == 0."""
+    B, L, H, P = x.shape
+    G, N = Bm.shape[-2:]
+    assert L % chunk == 0 and H % G == 0
+    rep = H // G
+    nc = L // chunk
+    grid = (B, H, nc)
+
+    x_spec = pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0))
+    dt_spec = pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h))
+    a_spec = pl.BlockSpec((1,), lambda b, h, c: (h,))
+    bc_spec = pl.BlockSpec((1, chunk, 1, N),
+                           lambda b, h, c: (b, c, h // rep, 0))
+    y_spec = pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0))
+    st_spec = pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0))
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    y, state = pl.pallas_call(
+        functools.partial(_kernel, num_chunks=nc),
+        grid=grid,
+        in_specs=[x_spec, dt_spec, a_spec, bc_spec, bc_spec],
+        out_specs=[y_spec, st_spec],
+        out_shape=[jax.ShapeDtypeStruct((B, L, H, P), x.dtype),
+                   jax.ShapeDtypeStruct((B, H, P, N), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(x, dt, A, Bm, Cm)
+    return y, state

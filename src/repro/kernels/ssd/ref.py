@@ -1,0 +1,13 @@
+"""Oracle for the SSD kernel: the pure-jnp chunked scan used by the model."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.mamba import ssd_chunked
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+            Cm: jax.Array, *, chunk: int = 128):
+    """Returns (y, final_state), matching ssd_pallas."""
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk,
+                       return_final_state=True)

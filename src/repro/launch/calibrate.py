@@ -1,0 +1,55 @@
+"""Layer-delta cost calibration for scanned models.
+
+XLA's ``cost_analysis()`` counts a ``while`` (scan) body ONCE, regardless of
+trip count — so the full-depth compile (which proves memory/sharding)
+undercounts FLOPs/bytes/collectives of the layer stack. Fix: compile two
+small *unrolled* depth variants that differ by exactly one period of the
+dominant repeating segment, take the delta, and extrapolate:
+
+    total(L) = cost(n1) + (R - 1) * [cost(n2) - cost(n1)]
+
+with n1 = n_base + p, n2 = n_base + 2p, where the dominant segment repeats
+R times with pattern length p and n_base = L - R*p leftover layers (layer
+patterns are index-periodic, so front-truncation preserves the mix).
+Encoder-decoder models scale both stacks together (equal repeats).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.config import ModelConfig
+from repro.models import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class DepthVariants:
+    cfg_n1: ModelConfig
+    cfg_n2: ModelConfig
+    k: int              # extrapolation multiplier (R - 1)
+
+
+def depth_variants(cfg: ModelConfig) -> DepthVariants:
+    model = Model(cfg)
+    dom = max(model.segments, key=lambda s: s.repeat)
+    R, p = dom.repeat, len(dom.pattern)
+    n_base = cfg.num_layers - R * p
+    n1, n2 = n_base + p, n_base + 2 * p
+    enc1 = enc2 = cfg.encoder_layers
+    if cfg.encoder_layers:
+        # whisper-style: encoder repeat equals decoder repeat; scale jointly
+        assert cfg.encoder_layers == cfg.num_layers, \
+            "joint depth calibration assumes equal enc/dec depth"
+        enc1, enc2 = n1, n2
+    mk = lambda n, e: dataclasses.replace(cfg, num_layers=n,
+                                          encoder_layers=e)
+    return DepthVariants(mk(n1, enc1), mk(n2, enc2), R - 1)
+
+
+def extrapolate(c1: dict, c2: dict, k: int) -> dict:
+    """total = c1 + k * (c2 - c1), key-wise over numeric leaves."""
+    out = {}
+    for key in c1:
+        v1, v2 = c1.get(key, 0.0), c2.get(key, 0.0)
+        if isinstance(v1, (int, float)) and isinstance(v2, (int, float)):
+            out[key] = v1 + k * (v2 - v1)
+    return out

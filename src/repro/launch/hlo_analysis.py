@@ -1,0 +1,177 @@
+"""Compiled-HLO analysis: cost, memory, and collective-byte extraction.
+
+This is the dry-run "profiler" (no real TPU): ``cost_analysis()`` gives
+per-device HLO FLOPs and bytes accessed; collective bytes are NOT in
+cost_analysis, so we parse the post-SPMD optimized HLO and sum the result
+sizes of every collective op (shapes in partitioned HLO are per-device).
+
+Per-op traffic model (ring algorithms, (n-1)/n ~ 1):
+  all-gather          result bytes          (received per device)
+  all-reduce          2x result bytes       (reduce-scatter + all-gather)
+  reduce-scatter      result bytes x ~n     -> operand bytes ~ result*n; we
+                      count result bytes * (group-1) when parseable else 1x
+  all-to-all          result bytes
+  collective-permute  result bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<result>.*?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(", re.M)
+_SHAPE = re.compile(r"(?P<dt>[a-z]\d*[a-z]*\d*(?:e\dm\d\w*)?)\[(?P<dims>[\d,]*)\]")
+_GROUPS = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    """Max tensor size among the dtype[dims] shapes in ``text``."""
+    best = 0
+    for m in _SHAPE.finditer(text):
+        bs = _DTYPE_BYTES.get(m.group("dt"))
+        if bs is None:
+            continue
+        n = 1
+        dims = m.group("dims")
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        best = max(best, n * bs)
+    return best
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_op: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_op.values()))
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    bytes_by_op: dict[str, float] = {}
+    for m in _COLL.finditer(hlo_text):
+        op = m.group("op")
+        if m.group(0).rstrip().endswith("-done("):
+            continue  # count start/untagged once, not the -done half
+        size = _shape_bytes(m.group("result"))
+        mult = 2.0 if op == "all-reduce" else 1.0
+        line_end = hlo_text.find("\n", m.end())
+        line = hlo_text[m.start(): line_end if line_end > 0 else None]
+        if op == "reduce-scatter":
+            g = _GROUPS.search(line)
+            if g:
+                mult = max(len(g.group(1).split(",")) - 1, 1)
+        counts[op] = counts.get(op, 0) + 1
+        bytes_by_op[op] = bytes_by_op.get(op, 0.0) + size * mult
+    return CollectiveStats(counts, bytes_by_op)
+
+
+_IOTA_RG = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_EXPL_RG = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_crosses(line: str, boundary: int) -> Optional[bool]:
+    """Does this collective's replica group span the pod boundary?"""
+    m = _IOTA_RG.search(line)
+    if m:
+        import numpy as np
+        ng, gs = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            ids = ids.transpose([int(p) for p in m.group(4).split(",")])
+        rows = ids.reshape(ng, gs)
+        side = rows < boundary
+        return bool(np.any(side.any(axis=1) & (~side).any(axis=1)))
+    m = _EXPL_RG.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",")]
+        return any(i < boundary for i in ids) and any(i >= boundary
+                                                      for i in ids)
+    return None
+
+
+def classify_collectives(hlo_text: str, pod_boundary: int) -> dict:
+    """Split per-device collective bytes into cross-pod (DCN) vs pod-local
+    (ICI) traffic — the lens for the hierarchical-ZeRO comparison."""
+    cross = intra = unknown = 0.0
+    for m in _COLL.finditer(hlo_text):
+        if m.group(0).rstrip().endswith("-done("):
+            continue
+        size = _shape_bytes(m.group("result"))
+        mult = 2.0 if m.group("op") == "all-reduce" else 1.0
+        line_end = hlo_text.find("\n", m.end())
+        line = hlo_text[m.start(): line_end if line_end > 0 else None]
+        c = _group_crosses(line, pod_boundary)
+        if c is None:
+            unknown += size * mult
+        elif c:
+            cross += size * mult
+        else:
+            intra += size * mult
+    return {"cross_pod_bytes": cross, "pod_local_bytes": intra,
+            "unknown_bytes": unknown}
+
+
+def memory_stats(compiled) -> dict:
+    out: dict[str, float] = {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return out
+    if ma is None:
+        return out
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out
+
+
+def cost_stats(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals", "utilization"):
+        if k in ca:
+            out[k.replace(" ", "_")] = float(ca[k])
+    # per-memory-space bytes when present
+    for k, v in ca.items():
+        if isinstance(k, str) and k.startswith("bytes accessed"):
+            out[k.replace(" ", "_")] = float(v)
+    return out
+
+
+def analyze(compiled) -> dict:
+    """Everything §Roofline needs from one compiled executable."""
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    return {
+        "cost": cost_stats(compiled),
+        "memory": memory_stats(compiled),
+        "collectives": {
+            "counts": colls.counts,
+            "bytes_by_op": colls.bytes_by_op,
+            "total_bytes_per_device": colls.total_bytes,
+        },
+    }

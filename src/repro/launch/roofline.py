@@ -1,0 +1,138 @@
+"""Three-term roofline model from dry-run artifacts (§Roofline).
+
+Target hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI per chip. The terms are seconds-per-step on the single-pod (256-chip)
+mesh, derived from the *calibrated* per-device totals (scan bodies
+extrapolated to full depth — launch/calibrate.py):
+
+  compute    = HLO_FLOPs / peak_FLOPs
+  memory     = HLO_bytes_accessed / HBM_bw   (upper bound: XLA counts every
+               fusion's operand/result bytes; on-chip reuse isn't modeled)
+  collective = collective_bytes / ICI_bw     (per-device parsed HLO traffic)
+
+MODEL_FLOPS uses 6*N*D (train), 2*N*D (prefill), 2*N_active*B (decode) per
+device; the ratio MODEL_FLOPS/HLO_FLOPs exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def active_params(cfg) -> tuple[int, int]:
+    """(total_params, active_params) from the config (MoE-aware)."""
+    from repro.models import Model
+    from repro.models.spec import num_params
+    model = Model(cfg)
+    total = num_params(model.specs())
+    if cfg.moe.num_experts == 0:
+        return total, total
+    # subtract the inactive routed-expert fraction per MoE layer
+    from repro.models import moe as moe_lib
+    expert_specs = moe_lib.moe_specs(cfg.d_model, cfg.moe, cfg.mlp_act)
+    routed = num_params({k: v for k, v in expert_specs.items()
+                         if k in ("w1", "w2", "w3")})
+    n_moe_layers = sum(cfg.moe.is_moe_layer(i) for i in range(cfg.num_layers))
+    inactive_frac = 1.0 - cfg.moe.top_k / cfg.moe.num_experts
+    active = total - int(n_moe_layers * routed * inactive_frac)
+    return total, active
+
+
+def model_flops_per_device(cfg, kind: str, seq_len: int, global_batch: int,
+                           n_devices: int) -> float:
+    total, active = active_params(cfg)
+    if kind == "train":
+        return 6.0 * active * seq_len * global_batch / n_devices
+    if kind == "prefill":
+        return 2.0 * active * seq_len * global_batch / n_devices
+    return 2.0 * active * global_batch / n_devices      # decode: 1 token
+
+
+@dataclasses.dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    kind: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    hlo_flops: float
+    model_flops: float
+    useful_ratio: float          # MODEL/HLO
+    roofline_frac: float         # compute_s / max(term)
+    mem_args_gib: float
+    mem_temp_gib: float
+    collective_bytes: float
+
+    def row(self) -> str:
+        return (f"{self.arch},{self.shape},{self.kind},"
+                f"{self.compute_s:.4e},{self.memory_s:.4e},"
+                f"{self.collective_s:.4e},{self.dominant},"
+                f"{self.useful_ratio:.3f},{self.roofline_frac:.3f},"
+                f"{self.mem_args_gib:.2f},{self.mem_temp_gib:.2f}")
+
+
+def cell_roofline(rec: dict, cfg=None) -> Optional[CellRoofline]:
+    if rec.get("status") != "ok":
+        return None
+    cal = rec.get("calibrated") or {}
+    flops = cal.get("flops") or rec.get("cost", {}).get("flops", 0.0)
+    byts = cal.get("bytes_accessed") or rec.get("cost", {}).get(
+        "bytes_accessed", 0.0)
+    coll = (cal.get("coll_total")
+            if cal.get("coll_total") is not None
+            else rec.get("collectives", {}).get("total_bytes_per_device",
+                                                0.0))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    coll_s = coll / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    if cfg is None:
+        from repro.config import get_arch
+        cfg = get_arch(rec["arch"])
+    mf = model_flops_per_device(cfg, rec["kind"], rec["seq_len"],
+                                rec["global_batch"], rec["n_devices"])
+    mem = rec.get("memory", {})
+    return CellRoofline(
+        arch=rec["arch"], shape=rec["shape"], kind=rec["kind"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        dominant=dominant, hlo_flops=flops, model_flops=mf,
+        useful_ratio=mf / flops if flops else 0.0,
+        roofline_frac=compute_s / max(max(terms.values()), 1e-30),
+        mem_args_gib=mem.get("argument_size_in_bytes", 0.0) / 2 ** 30,
+        mem_temp_gib=mem.get("temp_size_in_bytes", 0.0) / 2 ** 30,
+        collective_bytes=coll)
+
+
+def load_cells(art_dir: str = "artifacts/dryrun/single") -> list[dict]:
+    out = []
+    if not os.path.isdir(art_dir):
+        return out
+    for arch in sorted(os.listdir(art_dir)):
+        d = os.path.join(art_dir, arch)
+        for f in sorted(os.listdir(d)):
+            if f.endswith(".json"):
+                with open(os.path.join(d, f)) as fh:
+                    out.append(json.load(fh))
+    return out
+
+
+def full_table(art_dir: str = "artifacts/dryrun/single") -> list[CellRoofline]:
+    rows = []
+    for rec in load_cells(art_dir):
+        r = cell_roofline(rec)
+        if r is not None:
+            rows.append(r)
+    return rows
+
+
+HEADER = ("arch,shape,kind,compute_s,memory_s,collective_s,dominant,"
+          "useful_ratio,roofline_frac,args_gib,temp_gib")

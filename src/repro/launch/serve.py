@@ -1,0 +1,75 @@
+"""Batched serving driver: prefill + greedy decode with sharded KV caches.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ParallelConfig, get_arch, get_smoke
+from repro.launch.mesh import make_host_mesh
+from repro.models import Model
+from repro.serve import make_serve_step
+from repro.sharding import make_rules
+from repro.utils import logger
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--model-axis", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
+    mesh = make_host_mesh(args.model_axis)
+    parallel = ParallelConfig(remat="none", moe_impl="dense",
+                              shard_model_axes=args.model_axis > 1)
+    model = Model(cfg, parallel, make_rules(mesh, parallel))
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                      (args.batch, args.prompt_len),
+                                      dtype=np.int32))
+    batch = {"tokens": prompt}
+    if cfg.frontend == "patch_stub":
+        batch["patches"] = jnp.zeros((args.batch, cfg.num_patches,
+                                      cfg.d_model), jnp.float32)
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = jnp.zeros((args.batch, cfg.encoder_seq,
+                                     cfg.d_model), jnp.float32)
+
+    t0 = time.time()
+    logits, caches = jax.jit(model.prefill)(params, batch)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+    step_fn = jax.jit(make_serve_step(model))
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    t1 = time.time()
+    for t in range(args.prompt_len, args.prompt_len + args.gen - 1):
+        logits, caches = step_fn(params, caches, tok, jnp.int32(t))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(out[-1])
+    t_decode = time.time() - t1
+    gen = jnp.stack(out, axis=1)
+    toks_s = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    logger.info("prefill %.2fs; decode %d x %d tokens in %.2fs "
+                "(%.1f tok/s incl. first-step compile)",
+                t_prefill, args.batch, args.gen, t_decode, toks_s)
+    logger.info("sample generation: %s", np.asarray(gen[0][:16]))
+
+
+if __name__ == "__main__":
+    main()

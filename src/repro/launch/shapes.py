@@ -1,0 +1,57 @@
+"""The assigned input-shape set and per-arch cell plan.
+
+Four shapes per LM-family arch (40 cells total):
+  train_4k      seq 4096,    global_batch 256   -> lowers train_step
+  prefill_32k   seq 32768,   global_batch 32    -> lowers prefill
+  decode_32k    seq 32768,   global_batch 128   -> lowers serve_step
+  long_500k     seq 524288,  global_batch 1     -> lowers serve_step
+
+``long_500k`` needs sub-quadratic decode state: it runs for the SWA-bounded,
+SSM and hybrid archs and is recorded as SKIP for pure full-attention archs
+(DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# archs whose decode state stays bounded (SWA window / SSM state / hybrid)
+LONG_CONTEXT_OK = {
+    "gemma3-27b",            # 5/6 layers SWA-1024; global layers linear decode
+    "h2o-danube-1.8b",       # SWA 4096
+    "mamba2-1.3b",           # O(1) SSM state
+    "mixtral-8x22b",         # SWA 4096
+    "jamba-1.5-large-398b",  # 7/8 layers SSM
+}
+
+
+def cell_plan(arch: str, cfg: ModelConfig) -> list[tuple[ShapeSpec, str]]:
+    """[(shape, "run"|"skip:<reason>")] for one architecture."""
+    plan = []
+    for shape in SHAPES.values():
+        verdict = "run"
+        if shape.name == "long_500k" and arch not in LONG_CONTEXT_OK:
+            verdict = "skip:full-attention decode state at 500k is unbounded"
+        plan.append((shape, verdict))
+    return plan
+
+
+def effective_batch(shape: ShapeSpec, cfg: ModelConfig) -> int:
+    return shape.global_batch

@@ -1,0 +1,3 @@
+from repro.models.model import Model, LayerPlan, layer_plans, segment_plans
+
+__all__ = ["Model", "LayerPlan", "layer_plans", "segment_plans"]

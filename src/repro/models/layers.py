@@ -1,0 +1,183 @@
+"""Core layers: norms, MLPs, embeddings, rotary embeddings, losses.
+
+All layers are (specs, apply) function pairs operating on plain dict pytrees.
+Compute dtype is bf16 (configurable); parameters are stored fp32 and cast at
+use — the mixed-precision recipe the paper's framework (InternEvo) uses.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.spec import ParamSpec
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_specs(dim: int) -> dict:
+    return {"scale": ParamSpec((dim,), ("embed",), init="ones")}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN)
+# ---------------------------------------------------------------------------
+
+def mlp_specs(d_model: int, d_ff: int, act: str) -> dict:
+    glu = act.endswith("_glu")
+    specs = {
+        "w1": ParamSpec((d_model, d_ff), ("embed", "mlp"),
+                        stddev=d_model ** -0.5),
+        "w2": ParamSpec((d_ff, d_model), ("mlp", "embed"),
+                        stddev=d_ff ** -0.5),
+    }
+    if glu:
+        specs["w3"] = ParamSpec((d_model, d_ff), ("embed", "mlp"),
+                                stddev=d_model ** -0.5)
+    return specs
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name.startswith("silu"):
+        return jax.nn.silu(x)
+    if name.startswith("gelu"):
+        return jax.nn.gelu(x)
+    if name == "relu2":  # nemotron-4 squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def mlp(params: Params, x: jax.Array, act: str, dtype: Any) -> jax.Array:
+    w1 = params["w1"].astype(dtype)
+    h = _act(act, x @ w1)
+    if act.endswith("_glu"):
+        h = h * (x @ params["w3"].astype(dtype))
+    return h @ params["w2"].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    # N(0, 1/d): the sqrt(d) input scaling then yields unit-variance hidden
+    # states, and tied-embedding logits stay O(1) at init.
+    return {"tok": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                             ("vocab", "embed"),
+                             stddev=cfg.d_model ** -0.5)}
+
+
+def embed(params: Params, tokens: jax.Array, dtype: Any,
+          d_model: int) -> jax.Array:
+    w = params["tok"].astype(dtype)
+    h = jnp.take(w, tokens, axis=0)
+    return h * jnp.asarray(d_model, dtype) ** 0.5
+
+
+def lm_head_specs(cfg: ModelConfig) -> dict:
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": ParamSpec((cfg.d_model, cfg.padded_vocab),
+                           ("embed", "vocab"), stddev=cfg.d_model ** -0.5)}
+
+
+def lm_head(params: Params, embed_params: Params, h: jax.Array,
+            tie: bool, dtype: Any) -> jax.Array:
+    if tie:
+        w = embed_params["tok"].astype(dtype).T
+    else:
+        w = params["w"].astype(dtype)
+    return h @ w
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (encoder)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-jnp.log(10000.0) * jnp.arange(dim // 2, dtype=jnp.float32)
+                  / max(dim // 2 - 1, 1))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Loss: chunked softmax cross-entropy (+ z-loss), stable in fp32
+# ---------------------------------------------------------------------------
+
+def softmax_xent_chunked(logits_fn, h: jax.Array, labels: jax.Array,
+                         weights: jax.Array, *, chunk: int = 1024,
+                         z_loss: float = 0.0) -> tuple[jax.Array, jax.Array]:
+    """Cross entropy without materializing (B, S, V) fp32 logits.
+
+    ``logits_fn(h_chunk) -> (B, c, V)`` maps hidden states to logits (bf16 ok);
+    the reduction is computed per sequence-chunk in fp32. Returns
+    (sum_loss, sum_weight).
+    """
+    B, S, _ = h.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    def one(h_c, y_c, w_c):
+        logits = logits_fn(h_c).astype(jnp.float32)            # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)                # (B, c)
+        ll = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        nll = lse - ll
+        if z_loss:
+            nll = nll + z_loss * jnp.square(lse)
+        return jnp.sum(nll * w_c), jnp.sum(w_c)
+
+    if n > 0:
+        h_m = h[:, :n * chunk].reshape(B, n, chunk, -1).swapaxes(0, 1)
+        y_m = labels[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+        w_m = weights[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+
+        def body(carry, xs):
+            loss, wsum = carry
+            l, w = one(*xs)
+            return (loss + l, wsum + w), None
+
+        (loss, wsum), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), jnp.float32(0.0)), (h_m, y_m, w_m))
+    else:
+        loss = wsum = jnp.float32(0.0)
+    if rem:
+        l, w = one(h[:, n * chunk:], labels[:, n * chunk:],
+                   weights[:, n * chunk:])
+        loss, wsum = loss + l, wsum + w
+    return loss, wsum

@@ -1,0 +1,139 @@
+"""Serving: jit'd prefill / decode with cache shardings, batched generation."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ParallelConfig
+from repro.models import Model
+from repro.sharding import Rules, make_rules
+
+# logical axes for each KV-cache leaf, keyed by its dict name
+_CACHE_AXES = {
+    "k": ("batch", "kv_seq", "kv_heads", None),
+    "v": ("batch", "kv_seq", "kv_heads", None),
+    "pos": ("batch", "kv_seq"),
+    "ckv": ("batch", "kv_seq", None),
+    "k_rope": ("batch", "kv_seq", None),
+    "ssm": ("batch", "ssm_heads", None, None),
+    "conv_x": ("batch", None, "ssm_inner"),
+    "conv_B": ("batch", None, None),
+    "conv_C": ("batch", None, None),
+    "cross_k": ("batch", None, "kv_heads", None),
+    "cross_v": ("batch", None, "kv_heads", None),
+}
+
+
+def cache_shardings(caches: Any, rules: Rules) -> Any:
+    """NamedShardings for a cache tree (leaves found by dict key name)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    out = []
+    for path, leaf in flat:
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        axes = _CACHE_AXES.get(name)
+        if axes is None:
+            axes = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        # caches are stacked over scan repeats -> leading "stacked" dim
+        if len(leaf.shape) == len(axes) + 1:
+            axes = ("stacked",) + axes
+        out.append(rules.sharding(leaf.shape, tuple(axes)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_caches(model: Model, batch: int, prompt_len: int,
+                    rules: Optional[Rules] = None) -> Any:
+    """ShapeDtypeStruct cache tree (with shardings when rules given)."""
+    shapes = jax.eval_shape(lambda: model.init_caches(batch, prompt_len))
+    if rules is None:
+        return shapes
+    sh = cache_shardings(shapes, rules)
+    return jax.tree_util.tree_map(
+        lambda s, h: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=h),
+        shapes, sh)
+
+
+def make_serve_step(model: Model):
+    """decode_step(params, caches, tokens, cur_index) -> (logits, caches)."""
+    def step(params, caches, tokens, cur_index):
+        return model.decode_step(params, caches, tokens, cur_index)
+    return step
+
+
+def make_prefill(model: Model, max_cache_len: int = 0):
+    def prefill(params, batch):
+        return model.prefill(params, batch, max_cache_len=max_cache_len)
+    return prefill
+
+
+def greedy_generate(model: Model, params, prompt: jax.Array,
+                    n_tokens: int) -> jax.Array:
+    """Batched greedy decode (CPU-scale; used by examples/eval runner)."""
+    B, S = prompt.shape
+    logits, caches = model.prefill(params, {"tokens": prompt})
+    step_fn = jax.jit(make_serve_step(model))
+    out = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out.append(tok)
+    for t in range(S, S + n_tokens - 1):
+        logits, caches = step_fn(params, caches, tok, jnp.int32(t))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.stack(out, axis=1)
+
+
+def abstract_serve_inputs(model: Model, batch: int, kv_len: int,
+                          mesh: Mesh, parallel: ParallelConfig):
+    """(params, caches, tokens, cur_index) ShapeDtypeStructs for dry-runs."""
+    from repro.sharding import tree_shardings
+    from repro.models.spec import abstract_params
+
+    rules = make_rules(mesh, parallel)
+    p_sh = tree_shardings(rules, model.specs())
+    params = abstract_params(model.specs(), p_sh)
+    caches = abstract_caches(model, batch, kv_len, rules)
+    tokens = jax.ShapeDtypeStruct(
+        (batch,), jnp.int32,
+        sharding=rules.sharding((batch,), ("batch",)))
+    cur = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    return params, caches, tokens, cur
+
+
+def compile_serve_step(model: Model, mesh: Mesh, parallel: ParallelConfig, *,
+                       batch: int, kv_len: int, donate: bool = True):
+    """Lower one decode step against a kv_len cache. Returns Lowered."""
+    args = abstract_serve_inputs(model, batch, kv_len, mesh, parallel)
+    step = jax.jit(make_serve_step(model),
+                   donate_argnums=(1,) if donate else ())
+    with mesh:
+        return step.lower(*args)
+
+
+def compile_prefill(model: Model, mesh: Mesh, parallel: ParallelConfig, *,
+                    batch: int, seq_len: int):
+    """Lower the prefill pass (prompt -> last logits + caches)."""
+    from repro.models.spec import abstract_params
+    from repro.sharding import tree_shardings
+    from repro.train.train_step import abstract_batch, batch_shardings
+
+    rules = make_rules(mesh, parallel)
+    p_sh = tree_shardings(rules, model.specs())
+    params = abstract_params(model.specs(), p_sh)
+    ab = abstract_batch(model, batch, seq_len)
+    ab.pop("labels"), ab.pop("weights")
+    b_sh = batch_shardings(mesh, parallel, ab)
+    ab = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        ab, b_sh)
+    # the prefill cell's cache horizon is the prompt itself (decode cells
+    # cover the long-cache programs separately)
+    fn = jax.jit(make_prefill(model, max_cache_len=seq_len))
+    with mesh:
+        return fn.lower(params, ab)

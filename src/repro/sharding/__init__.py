@@ -1,0 +1,190 @@
+"""Sharding rule engine: logical axis names -> mesh PartitionSpecs.
+
+Every parameter/activation dimension carries a *logical* axis name. A rule
+table maps logical names to (tuples of) mesh axis names; ``best_effort_spec``
+drops mesh axes whose size does not divide the dimension, mirroring what
+production frameworks (MaxText, T5X) do, so e.g. smollm's 5 KV heads simply
+stay replicated on a model=16 mesh instead of failing to lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ParallelConfig
+from repro.utils import logger
+
+# Mesh axis names used throughout.
+POD, DATA, MODEL = "pod", "data", "model"
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes that carry the batch dimension (all non-model axes)."""
+    return tuple(a for a in mesh.axis_names if a != MODEL)
+
+
+def fsdp_axes(mesh: Mesh, parallel: ParallelConfig) -> tuple[str, ...]:
+    """Axes over which ZeRO-3 shards parameters."""
+    if parallel.zero == "zero3_hier":
+        # Hierarchical ZeRO (paper §2.2 / InternEvo): bound the parameter
+        # gather group to a pod -> shard over the pod-local data axis only,
+        # keeping the all-gather on fast intra-pod links.
+        return (DATA,)
+    if parallel.zero == "zero3":
+        if not parallel.shard_model_axes and MODEL in mesh.axis_names:
+            # no tensor parallelism -> the model axis is free; fold it into
+            # FSDP (2-D FSDP: params shard over every axis, batch too)
+            return data_axes(mesh) + (MODEL,)
+        return data_axes(mesh)
+    return ()
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Logical-axis -> mesh-axes mapping for one (mesh, parallel) setting."""
+    table: dict[str, tuple[str, ...]]
+    mesh: Mesh
+
+    def spec(self, axes: Sequence[Optional[str]]) -> P:
+        """Best-effort PartitionSpec for a dim-name tuple."""
+        used: set[str] = set()
+        entries: list[Any] = []
+        for name in axes:
+            if name is None:
+                entries.append(None)
+                continue
+            mesh_axes = tuple(a for a in self.table.get(name, ()) if a in self.mesh.axis_names)
+            mesh_axes = tuple(a for a in mesh_axes if a not in used)
+            entries.append(mesh_axes if mesh_axes else None)
+            used.update(mesh_axes)
+        return P(*entries)
+
+    def shard_spec(self, shape: Sequence[int], axes: Sequence[Optional[str]]) -> P:
+        """Like ``spec`` but drops mesh axes that don't divide the dim size."""
+        assert len(shape) == len(axes), (shape, axes)
+        used: set[str] = set()
+        entries: list[Any] = []
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        for dim, name in zip(shape, axes):
+            if name is None:
+                entries.append(None)
+                continue
+            mesh_axes = tuple(a for a in self.table.get(name, ())
+                              if a in self.mesh.axis_names and a not in used)
+            keep: list[str] = []
+            extent = 1
+            for a in mesh_axes:
+                if dim % (extent * sizes[a]) == 0:
+                    keep.append(a)
+                    extent *= sizes[a]
+            entries.append(tuple(keep) if keep else None)
+            used.update(keep)
+        return P(*entries)
+
+    def sharding(self, shape: Sequence[int], axes: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.shard_spec(shape, axes))
+
+
+def make_rules(mesh: Mesh, parallel: ParallelConfig) -> Rules:
+    """Build the rule table for a mesh + parallelism config.
+
+    Logical axes:
+      batch        activation batch                     -> all data axes
+      seq          activation sequence (seq-parallel)   -> model axis
+      embed        d_model dim of params (FSDP dim)     -> fsdp axes
+      mlp          FFN hidden dim                       -> model (TP)
+      heads        attention query heads                -> model (TP)
+      kv_heads     attention KV heads                   -> model (TP, best-effort)
+      vocab        embedding/output vocab               -> model (TP)
+      experts      MoE expert dim                       -> model (EP)
+      expert_mlp   per-expert hidden dim                -> model when EP off
+      kv_seq       decode KV-cache sequence dim         -> data axes (cache spread)
+      stacked      scanned-layer leading dim            -> never sharded
+    """
+    dax = data_axes(mesh)
+    fax = fsdp_axes(mesh, parallel)
+    model = (MODEL,) if parallel.shard_model_axes else ()
+    # with TP off, the model axis carries extra data parallelism instead
+    batch_axes = dax if parallel.shard_model_axes else dax + (
+        (MODEL,) if MODEL in mesh.axis_names else ())
+    table: dict[str, tuple[str, ...]] = {
+        "batch": batch_axes,
+        "seq": model if parallel.sequence_parallel else (),
+        "embed": fax,
+        "mlp": model,
+        "heads": model,
+        "kv_heads": model,
+        "vocab": model,
+        "experts": model if parallel.expert_parallel else (),
+        "expert_mlp": () if parallel.expert_parallel else model,
+        # decode KV caches: batch takes the data axes first (dim order);
+        # the cache sequence dim then spreads over whatever remains — for
+        # batched decode that's the model axis (flash-decode style seq
+        # partitioning), for batch-1 long-context decode it's data+model.
+        "kv_seq": dax + model,
+        "stacked": (),
+        "ssm_state": (),
+        "ssm_heads": model,
+        "ssm_inner": model,
+    }
+    return Rules(table=table, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# helpers for whole-pytree shardings
+# ---------------------------------------------------------------------------
+
+def tree_shardings(rules: Rules, spec_tree: Any) -> Any:
+    """Map a tree of ParamSpec (shape+axes) to NamedShardings."""
+    from repro.models.spec import ParamSpec  # local import to avoid cycle
+
+    def _one(ps: ParamSpec) -> NamedSharding:
+        return rules.sharding(ps.shape, ps.axes)
+
+    return jax.tree_util.tree_map(_one, spec_tree,
+                                  is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def constrain(x: jax.Array, rules: Rules, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names (best-effort)."""
+    spec = rules.shard_spec(x.shape, axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def log_sharding_summary(rules: Rules, spec_tree: Any, max_rows: int = 0) -> None:
+    from repro.models.spec import ParamSpec
+    from repro.utils import tree_flatten_with_paths
+    rows = []
+    for path, ps in tree_flatten_with_paths(spec_tree):
+        if isinstance(ps, ParamSpec):
+            rows.append((path, ps.shape, rules.shard_spec(ps.shape, ps.axes)))
+    for path, shape, spec in (rows[:max_rows] if max_rows else rows):
+        logger.info("%-60s %-24s %s", path, str(shape), spec)
+
+
+def device_put_tree(tree: Any, shardings: Any) -> Any:
+    return jax.tree_util.tree_map(lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+def mesh_size_bytes_per_device(tree: Any, rules: Rules, spec_tree: Any) -> float:
+    """Bytes/device for a tree of arrays under its shardings (analytic)."""
+    from repro.models.spec import ParamSpec
+    sizes = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+    total = 0.0
+    flat_specs = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    for ps in flat_specs:
+        spec = rules.shard_spec(ps.shape, ps.axes)
+        denom = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                denom *= sizes[a]
+        total += int(np.prod(ps.shape)) * np.dtype(ps.dtype).itemsize / denom
+    return total

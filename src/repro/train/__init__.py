@@ -1,0 +1,13 @@
+from repro.train.optimizer import (AdamState, adamw_init, adamw_update,
+                                   clip_by_global_norm, compress_grads,
+                                   compressor_init, global_norm, lr_schedule)
+from repro.train.train_step import (abstract_batch, batch_shardings,
+                                    compile_train_step, make_train_step,
+                                    opt_rules, state_shardings)
+
+__all__ = [
+    "AdamState", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "compress_grads", "compressor_init", "global_norm", "lr_schedule",
+    "abstract_batch", "batch_shardings", "compile_train_step",
+    "make_train_step", "opt_rules", "state_shardings",
+]

@@ -1,0 +1,130 @@
+"""AdamW with fp32 master state, global-norm clipping and LR schedules.
+
+Hand-rolled (no optax in this environment) but shaped like a production
+optimizer: states are a pytree mirroring params so sharding rules apply
+leaf-wise; ZeRO-1 shards m/v over the data axes while params stay replicated
+(see ``repro.train.train_step.opt_rules``); an optional int8 error-feedback
+gradient compressor implements the paper-era "distributed optimization trick"
+for bandwidth-constrained reductions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+Params = Any
+
+
+class AdamState(NamedTuple):
+    m: Params
+    v: Params
+    step: jax.Array
+
+
+def adamw_init(params: Params) -> AdamState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(m=zeros,
+                     v=jax.tree_util.tree_map(jnp.copy, zeros),
+                     step=jnp.zeros((), jnp.int32))
+
+
+def adamw_abstract(params: Params) -> AdamState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+    return AdamState(m=zeros, v=zeros,
+                     step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def lr_schedule(cfg: TrainConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to 10% of peak."""
+    step = step.astype(jnp.float32)
+    warm = cfg.learning_rate * step / max(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.learning_rate * (0.1 + 0.45 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_update(grads: Params, state: AdamState, params: Params,
+                 cfg: TrainConfig) -> tuple[Params, AdamState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2, eps = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + cfg.weight_decay * p
+        return (p - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamState(new_m, new_v, step), metrics
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback gradient compression (optional distributed-opt trick)
+# ---------------------------------------------------------------------------
+
+class CompressorState(NamedTuple):
+    error: Params     # residual feedback buffers (fp32)
+
+
+def compressor_init(params: Params) -> CompressorState:
+    return CompressorState(error=jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compress_decompress(g: jax.Array, err: jax.Array):
+    """Quantize (g + err) to int8 w/ per-tensor scale; return dequant + new err.
+
+    In a real deployment the int8 payload is what crosses the wire (4x less
+    DCN traffic than fp32); error feedback keeps the optimizer unbiased over
+    time. Here we model the numerics end-to-end.
+    """
+    x = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, x - deq
+
+
+def compress_grads(grads: Params, state: CompressorState):
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(state.error)
+    out = [compress_decompress(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_e = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return new_g, CompressorState(error=new_e)

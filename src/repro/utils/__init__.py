@@ -1,0 +1,141 @@
+"""Small shared utilities: pytree helpers, timers, deterministic RNG, logging."""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import logging
+import math
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+logger = logging.getLogger("repro")
+if not logger.handlers:
+    _h = logging.StreamHandler()
+    _h.setFormatter(logging.Formatter("[%(asctime)s %(levelname)s %(name)s] %(message)s"))
+    logger.addHandler(_h)
+    logger.setLevel(logging.INFO)
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers
+# ---------------------------------------------------------------------------
+
+def tree_size_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves (works on ShapeDtypeStruct too)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_num_params(tree: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(np.prod(l.shape)) for l in leaves if hasattr(l, "shape"))
+
+
+def tree_flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
+    """Flatten a pytree into ("a/b/c", leaf) pairs using jax key paths."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append(("/".join(_path_str(p) for p in path), leaf))
+    return out
+
+
+def _path_str(entry: Any) -> str:
+    if isinstance(entry, jax.tree_util.DictKey):
+        return str(entry.key)
+    if isinstance(entry, jax.tree_util.SequenceKey):
+        return str(entry.idx)
+    if isinstance(entry, jax.tree_util.GetAttrKey):
+        return str(entry.name)
+    return str(entry)
+
+
+def tree_allclose(a: Any, b: Any, rtol: float = 1e-5, atol: float = 1e-5) -> bool:
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
+               for x, y in zip(la, lb))
+
+
+def cast_floating(tree: Any, dtype: Any) -> Any:
+    """Cast floating-point leaves of a pytree to ``dtype``; leave ints alone."""
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(_cast, tree)
+
+
+# ---------------------------------------------------------------------------
+# timing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Timer:
+    name: str = ""
+    elapsed: float = 0.0
+
+    def __enter__(self) -> "Timer":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.elapsed = time.perf_counter() - self._t0
+
+
+@contextlib.contextmanager
+def log_time(name: str) -> Iterator[None]:
+    t0 = time.perf_counter()
+    yield
+    logger.info("%s took %.3fs", name, time.perf_counter() - t0)
+
+
+def timeit_median(fn: Callable[[], Any], *, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in seconds. Blocks on jax arrays."""
+    for _ in range(warmup):
+        _block(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _block(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def _block(x: Any) -> None:
+    for leaf in jax.tree_util.tree_leaves(x):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+# ---------------------------------------------------------------------------
+# misc numeric helpers
+# ---------------------------------------------------------------------------
+
+def round_up(x: int, m: int) -> int:
+    return int(math.ceil(x / m) * m)
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB", "PiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}EiB"
+
+
+def human_count(n: float) -> str:
+    for unit in ("", "K", "M", "B", "T"):
+        if abs(n) < 1000.0:
+            return f"{n:.2f}{unit}"
+        n /= 1000.0
+    return f"{n:.2f}Q"

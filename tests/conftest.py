@@ -1,0 +1,35 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import AttentionConfig, ModelConfig, ParallelConfig
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg() -> ModelConfig:
+    return ModelConfig(
+        name="tiny", num_layers=2, d_model=64, d_ff=128, vocab_size=256,
+        max_seq_len=128, vocab_pad_multiple=64,
+        attention=AttentionConfig(num_heads=4, num_kv_heads=2, head_dim=16))
+
+
+@pytest.fixture(scope="session")
+def tiny_parallel() -> ParallelConfig:
+    return ParallelConfig(remat="none", moe_impl="dense")
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (batch, seq + 1), 0, cfg.vocab_size,
+                              dtype=jnp.int32)
+    b = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+         "weights": jnp.ones((batch, seq), jnp.float32)}
+    if cfg.frontend == "patch_stub":
+        b["patches"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(key, 1),
+            (batch, cfg.num_patches, cfg.d_model), jnp.float32)
+    if cfg.frontend == "audio_stub":
+        b["frames"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(key, 2),
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return b

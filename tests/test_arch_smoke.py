@@ -1,0 +1,59 @@
+"""Per-architecture smoke tests: a reduced same-family config runs one
+forward + one train step on CPU with finite outputs and correct shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro.config import (ParallelConfig, TrainConfig, get_arch, get_smoke,
+                          list_archs)
+from repro.models import Model
+from repro.models.spec import num_params
+from repro.train import make_train_step
+from repro.train.optimizer import adamw_init
+
+ARCHS = list_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke(arch)
+    model = Model(cfg, ParallelConfig(remat="none", moe_impl="dense"))
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    batch = make_batch(cfg, B, S)
+    logits = model.forward_logits(params, batch)
+    exp_s = S + (cfg.num_patches if cfg.frontend == "patch_stub" else 0)
+    assert logits.shape == (B, exp_s, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    step = jax.jit(make_train_step(model, TrainConfig(global_batch=B,
+                                                      seq_len=S)))
+    p2, opt2, metrics = step(params, adamw_init(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+
+
+@pytest.mark.parametrize("arch,expected_b", [
+    ("gemma3-27b", 27.0), ("smollm-360m", 0.36), ("h2o-danube-1.8b", 1.83),
+    ("nemotron-4-15b", 15.6), ("internvl2-2b", 1.9), ("mamba2-1.3b", 1.34),
+    ("whisper-large-v3", 1.64), ("mixtral-8x22b", 140.6),
+    ("deepseek-v2-lite-16b", 15.7), ("jamba-1.5-large-398b", 398.6),
+    ("internlm-7b", 7.3), ("internlm-123b", 123.9),
+])
+def test_full_config_param_counts(arch, expected_b):
+    """The full configs match published parameter counts (no allocation)."""
+    n = num_params(Model(get_arch(arch)).specs()) / 1e9
+    assert abs(n - expected_b) / expected_b < 0.06, f"{arch}: {n:.2f}B"
+
+
+def test_segmentation_periods():
+    """Layer-pattern segmentation matches each arch's published structure."""
+    m = Model(get_arch("gemma3-27b"))
+    assert [(len(s.pattern), s.repeat) for s in m.segments] == [(6, 10), (1, 2)]
+    m = Model(get_arch("jamba-1.5-large-398b"))
+    assert [(len(s.pattern), s.repeat) for s in m.segments] == [(8, 9)]
+    m = Model(get_arch("deepseek-v2-lite-16b"))
+    assert [(len(s.pattern), s.repeat) for s in m.segments] == [(1, 1), (1, 26)]
+    plans = m.plans
+    assert plans[0].mlp == "dense" and all(p.mlp == "moe" for p in plans[1:])

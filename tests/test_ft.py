@@ -1,0 +1,179 @@
+"""Fault tolerance: diagnosis accuracy over the Table-3 taxonomy, two-round
+detection (property-based), spike policy, supervisor end-to-end."""
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ft.detection import (SimulatedFleet, StragglerMonitor,
+                                     two_round_detection)
+from repro.core.ft.diagnosis import FailureDiagnosisSystem, LogCompressor
+from repro.core.ft.events import BY_NAME, TABLE3, generate_log
+from repro.core.ft.spike import SpikeDetector
+from repro.core.ft.supervisor import JobFailure, Supervisor
+
+
+# --- detection ---------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(2, 64), data=st.data())
+def test_two_round_detection_exact(n, data):
+    """Property: the sweep finds exactly the faulty set for any fleet."""
+    faulty = data.draw(st.sets(st.integers(0, n - 1),
+                               max_size=max(n // 3, 1)))
+    fleet = SimulatedFleet(n, faulty=set(faulty))
+    res = two_round_detection(fleet.healthy_nodes(), fleet)
+    assert set(res.faulty) == faulty
+    # ~n/2 round-1 pairs + <=n round-2 probes (tiny fleets hit the ceiling)
+    assert res.probes <= (n + 1) // 2 + n
+
+
+def test_two_round_probe_count():
+    fleet = SimulatedFleet(64, faulty={5})
+    res = two_round_detection(fleet.healthy_nodes(), fleet)
+    assert res.probes == 32 + 2        # one failed pair -> 2 suspects
+
+
+def test_straggler_monitor_flags_slow_host():
+    mon = StragglerMonitor(range(8), min_samples=8)
+    rng = np.random.default_rng(0)
+    for _ in range(12):
+        for h in range(8):
+            mon.record(h, 1.0 + (0.6 if h == 3 else 0.0) + 0.01 * rng.random())
+    assert mon.stragglers() == [3]
+
+
+# --- diagnosis ---------------------------------------------------------------
+
+def test_diagnosis_accuracy_over_taxonomy():
+    """Every Table-3 failure type, buried in cascades, is diagnosed right
+    >= 90% of the time (the paper: ~90% less manual intervention)."""
+    sys_ = FailureDiagnosisSystem()
+    total, correct = 0, 0
+    for ft in TABLE3:
+        for seed in range(3):
+            log = generate_log(ft, seed=seed, n_normal=120)
+            diag = sys_.diagnose(log)
+            total += 1
+            correct += diag.failure == ft.name
+    assert correct / total >= 0.9, f"{correct}/{total}"
+
+
+def test_diagnosis_root_cause_beats_symptoms():
+    """NVLink fault w/ NCCL-timeout cascade must resolve to NVLinkError."""
+    sys_ = FailureDiagnosisSystem()
+    log = generate_log(BY_NAME["NVLinkError"], seed=1, cascade=True)
+    assert sys_.diagnose(log).failure == "NVLinkError"
+
+
+def test_diagnosis_learns_rules():
+    import dataclasses
+    # pin a single log template so the learned regex must generalize only
+    # over the randomized fields, not across alternative phrasings
+    ft = dataclasses.replace(BY_NAME["ECCError"],
+                             templates=BY_NAME["ECCError"].templates[:1])
+    sys_ = FailureDiagnosisSystem(seed_rules=[])
+    first = sys_.diagnose(generate_log(ft, seed=0))
+    assert first.source == "agent"
+    second = sys_.diagnose(generate_log(ft, seed=5))
+    assert second.failure == "ECCError"
+    assert second.source == "rule"       # continuous learning kicked in
+
+
+def test_log_compression_ratio():
+    comp = LogCompressor()
+    log = generate_log(BY_NAME["CUDAError"], seed=0, n_normal=2000)
+    kept = comp.compress(log)
+    assert comp.compression_ratio > 20
+    assert any("CUDA" in l for l in kept)     # error lines survive
+
+
+# --- spike -------------------------------------------------------------------
+
+def test_spike_detector_fires_and_names_rollback():
+    det = SpikeDetector(min_history=8, patience=3)
+    ev = None
+    for s in range(200):
+        loss = 2.0 - 0.002 * s + (4.0 if s >= 120 else 0.0)
+        ev = det.update(s, loss, available_ckpts=[0, 40, 80, 110])
+        if ev:
+            break
+    assert ev is not None
+    assert ev.onset_step == 120 and ev.rollback_step == 110
+    assert ev.skip_range[0] <= 120 < ev.skip_range[1]
+
+
+def test_spike_detector_ignores_transients():
+    det = SpikeDetector(min_history=8, patience=4)
+    rng = np.random.default_rng(0)
+    for s in range(300):
+        loss = 2.0 + 0.05 * rng.standard_normal()
+        if s % 50 == 10:
+            loss += 5.0        # single-step blip: recovers immediately
+        assert det.update(s, loss, available_ckpts=[0]) is None
+
+
+def test_spike_detector_handles_nan():
+    det = SpikeDetector(min_history=8, patience=2)
+    ev = None
+    for s in range(40):
+        loss = float("nan") if s >= 30 else 2.0 + 0.01 * (s % 3)
+        ev = det.update(s, loss, available_ckpts=[0, 20])
+        if ev:
+            break
+    assert ev is not None and ev.rollback_step == 20
+
+
+# --- supervisor --------------------------------------------------------------
+
+def test_supervisor_end_to_end(tmp_path):
+    from repro.core.ft.checkpoint import CheckpointManager
+    ckpt = CheckpointManager(str(tmp_path), keep=5)
+    fleet = SimulatedFleet(16)
+    sup = Supervisor(ckpt, FailureDiagnosisSystem(), fleet)
+    fired = set()
+    schedule = [(25, "NVLinkError"), (57, "ConnectionError")]
+
+    def job(ctx):
+        for step in range(ctx.start_step, 80):
+            if step % 10 == 0:
+                ckpt.save_async(step, {"step": np.int64(step)})
+            for fs, fname in schedule:
+                if step == fs and fs not in fired:
+                    fired.add(fs)
+                    if BY_NAME[fname].needs_node_cordon:
+                        fleet.fail({3})
+                    raise JobFailure(step, generate_log(BY_NAME[fname],
+                                                        seed=step),
+                                     truth=fname)
+        return 80
+
+    rep = sup.run(job)
+    ckpt.wait()
+    assert rep.completed and rep.final_step == 80
+    assert rep.auto_recoveries == 2 and rep.manual_interventions == 0
+    assert rep.diagnosis_accuracy == 1.0
+    assert 3 in fleet.cordoned                 # NVLink node cordoned
+    assert rep.lost_steps <= 12                # resumed from fresh snapshots
+
+
+def test_supervisor_surfaces_script_errors(tmp_path):
+    from repro.core.ft.checkpoint import CheckpointManager
+    ckpt = CheckpointManager(str(tmp_path), keep=2)
+    sup = Supervisor(ckpt, FailureDiagnosisSystem(), SimulatedFleet(4))
+    seen = []
+    sup.on_manual = seen.append
+    fired = []
+
+    def job(ctx):
+        if not fired:
+            fired.append(1)
+            raise JobFailure(3, generate_log(BY_NAME["SyntaxError"], seed=0),
+                             truth="SyntaxError")
+        return 10
+
+    rep = sup.run(job)
+    assert rep.completed
+    assert rep.manual_interventions == 1       # script bugs page a human
+    assert seen and not seen[0].auto_recoverable

@@ -1,0 +1,78 @@
+"""Dry-run machinery: HLO collective parsing, depth-variant calibration,
+mesh construction, and the cell plan (35 runnable of 40)."""
+import pytest
+
+from repro.config import get_arch, list_archs
+from repro.configs import ASSIGNED
+from repro.launch.calibrate import depth_variants, extrapolate
+from repro.launch.hlo_analysis import parse_collectives, _shape_bytes
+from repro.launch.shapes import LONG_CONTEXT_OK, SHAPES, cell_plan
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[8,512,2688]{2,1,0} all-gather(%x), replica_groups={{0,1,2,3}}
+  %ar = f32[1024]{0} all-reduce(%y), to_apply=%sum
+  %rs = f32[64,128]{1,0} reduce-scatter(%z), replica_groups={{0,1,2,3,4,5,6,7}}
+  %a2a = bf16[16,640,8192]{2,1,0} all-to-all(%w)
+  %cp = f32[32]{0} collective-permute(%v)
+  %ags = (bf16[4,4]{1,0}, bf16[8,4]{1,0}) all-gather-start(%q)
+  %agd = bf16[8,4]{1,0} all-gather-done(%ags)
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    st = parse_collectives(HLO)
+    assert st.counts == {"all-gather": 2, "all-reduce": 1,
+                         "reduce-scatter": 1, "all-to-all": 1,
+                         "collective-permute": 1}
+    ag = 8 * 512 * 2688 * 2 + 8 * 4 * 2          # incl. -start tuple result
+    assert st.bytes_by_op["all-gather"] == ag
+    assert st.bytes_by_op["all-reduce"] == 1024 * 4 * 2      # 2x model
+    assert st.bytes_by_op["reduce-scatter"] == 64 * 128 * 4 * 7  # (group-1)x
+    assert st.bytes_by_op["all-to-all"] == 16 * 640 * 8192 * 2
+
+
+def test_shape_bytes_picks_largest():
+    assert _shape_bytes("(f32[4,4], bf16[128,128])") == 128 * 128 * 2
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_depth_variants_cover_total_depth(arch):
+    cfg = get_arch(arch)
+    dv = depth_variants(cfg)
+    n1, n2 = dv.cfg_n1.num_layers, dv.cfg_n2.num_layers
+    # extrapolating layer COUNT must land exactly on the full depth
+    assert n1 + dv.k * (n2 - n1) == cfg.num_layers
+    assert dv.cfg_n1.validate() is None  # still a valid config
+
+
+def test_extrapolate_linear():
+    out = extrapolate({"flops": 10.0, "x": 1.0}, {"flops": 14.0, "x": 2.0}, 5)
+    assert out["flops"] == 30.0 and out["x"] == 6.0
+
+
+def test_cell_plan_counts():
+    """40 cells total; long_500k runs only for bounded-state archs -> 35."""
+    run = skip = 0
+    for arch in ASSIGNED:
+        cfg = get_arch(arch)
+        for shape, verdict in cell_plan(arch, cfg):
+            if verdict == "run":
+                run += 1
+            else:
+                skip += 1
+                assert shape.name == "long_500k"
+                assert arch not in LONG_CONTEXT_OK
+    assert run + skip == 40
+    assert run == 35 and skip == 5
+
+
+def test_mesh_shapes():
+    # constructing the production meshes requires 512 forced host devices;
+    # here we only verify the requested geometry logic
+    from repro.launch import mesh as mesh_mod
+    import inspect
+    src = inspect.getsource(mesh_mod.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '("pod", "data", "model")' in src

@@ -1,0 +1,126 @@
+"""Prefill + decode must reproduce full-forward (teacher-forced) logits —
+the strongest cache-correctness check, run per attention family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (AttentionConfig, ModelConfig, MoEConfig,
+                          ParallelConfig, SSMConfig)
+from repro.models import Model
+
+
+def _decode_parity(cfg: ModelConfig, atol: float = 1e-4):
+    """prefill(prompt[:k]) + decode steps == forward(prompt) logits.
+
+    Run in fp32: the full-forward (blockwise flash) and decode
+    (cache-attention) paths are then numerically equivalent to ~1e-6;
+    bf16 accumulation-order noise would need sloppy tolerances."""
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    parallel = ParallelConfig(remat="none", moe_impl="dense",
+                              decode_moe_impl="dense")
+    model = Model(cfg, parallel)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, k = 2, 24, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size, dtype=jnp.int32)
+    batch = {"tokens": toks}
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.encoder_seq, cfg.d_model))
+    full = model.forward_logits(params, batch)          # (B, S, V)
+    pre_batch = dict(batch, tokens=toks[:, :k])
+    logits, caches = model.prefill(params, pre_batch)
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full[:, k - 1]),
+                               rtol=atol, atol=atol)
+    for t in range(k, S):
+        logits, caches = model.decode_step(params, caches, toks[:, t],
+                                           jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full[:, t]),
+            rtol=atol, atol=atol,
+            err_msg=f"{cfg.name}: decode step {t}")
+
+
+def test_decode_parity_gqa(tiny_cfg):
+    _decode_parity(tiny_cfg)
+
+
+def test_decode_parity_swa(tiny_cfg):
+    cfg = dataclasses.replace(
+        tiny_cfg, name="swa",
+        attention=dataclasses.replace(tiny_cfg.attention, sliding_window=8))
+    _decode_parity(cfg)
+
+
+def test_decode_parity_local_global(tiny_cfg):
+    cfg = dataclasses.replace(
+        tiny_cfg, name="lg", num_layers=4,
+        attention=dataclasses.replace(tiny_cfg.attention, global_every=2,
+                                      local_window=8))
+    _decode_parity(cfg)
+
+
+def test_decode_parity_mla():
+    cfg = ModelConfig(
+        name="mla", num_layers=2, d_model=64, d_ff=128, vocab_size=256,
+        max_seq_len=128, vocab_pad_multiple=64,
+        attention=AttentionConfig(kind="mla", num_heads=4, num_kv_heads=4,
+                                  kv_lora_rank=32, qk_nope_dim=16,
+                                  qk_rope_dim=8, v_head_dim=16))
+    _decode_parity(cfg)
+
+
+def test_decode_parity_ssm():
+    cfg = ModelConfig(
+        name="ssm", family="ssm", num_layers=2, d_model=64, d_ff=0,
+        vocab_size=256, max_seq_len=128, vocab_pad_multiple=64,
+        ssm=SSMConfig(state_dim=16, head_dim=16, n_groups=1, chunk_size=8))
+    _decode_parity(cfg, atol=1e-3)
+
+
+def test_decode_parity_hybrid_moe():
+    cfg = ModelConfig(
+        name="hy", family="hybrid", num_layers=4, d_model=64, d_ff=128,
+        vocab_size=256, max_seq_len=128, vocab_pad_multiple=64,
+        attn_every=4, attn_index=1,
+        attention=AttentionConfig(num_heads=4, num_kv_heads=2, head_dim=16),
+        ssm=SSMConfig(state_dim=16, head_dim=16, n_groups=1, chunk_size=8),
+        moe=MoEConfig(num_experts=4, top_k=2, expert_ff=64, moe_every=2,
+                      moe_offset=1))
+    _decode_parity(cfg, atol=1e-3)
+
+
+def test_decode_parity_encdec():
+    cfg = ModelConfig(
+        name="ed", family="audio", num_layers=2, d_model=64, d_ff=128,
+        vocab_size=256, max_seq_len=64, vocab_pad_multiple=64,
+        encoder_layers=2, encoder_seq=12, frontend="audio_stub",
+        mlp_act="gelu",
+        attention=AttentionConfig(num_heads=4, num_kv_heads=4, head_dim=16,
+                                  use_rope=False))
+    _decode_parity(cfg)
+
+
+def test_ring_buffer_rolls_past_window(tiny_cfg):
+    """Decoding far past the SWA window must equal the windowed forward."""
+    cfg = dataclasses.replace(
+        tiny_cfg, name="roll", max_seq_len=8, dtype="float32",
+        attention=dataclasses.replace(tiny_cfg.attention, sliding_window=8))
+    parallel = ParallelConfig(remat="none")
+    model = Model(cfg, parallel)
+    params = model.init(jax.random.PRNGKey(0))
+    S = 24    # 3x the window/cache
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0,
+                              cfg.vocab_size, dtype=jnp.int32)
+    full = model.forward_logits(params, {"tokens": toks})
+    logits, caches = model.prefill(params, {"tokens": toks[:, :8]})
+    for t in range(8, S):
+        logits, caches = model.decode_step(params, caches, toks[:, t],
+                                           jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full[:, t]),
+                                   rtol=1e-4, atol=1e-4)
