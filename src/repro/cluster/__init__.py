@@ -1,8 +1,15 @@
-"""Simulated datacenter: workload generator, scheduler, trace analysis (§3)."""
+"""Simulated datacenter: workload generator, scheduler, failure-aware trace
+replay, trace analysis (§3 + §5)."""
 from repro.cluster.workload import (JobRecord, WorkloadSpec, KALOS, SEREN,
                                     generate_jobs)
-from repro.cluster.scheduler import ReservationScheduler, simulate_queue
+from repro.cluster.scheduler import (NEVER_STARTED, ReservationScheduler,
+                                     simulate_queue)
+from repro.cluster.failures import (DEFAULT_TAXONOMY, FailureInjector,
+                                    ReplayFailureClass)
+from repro.cluster.replay import ReplayConfig, ReplayResult, replay_trace
 from repro.cluster.analysis import trace_summary
 
 __all__ = ["JobRecord", "WorkloadSpec", "KALOS", "SEREN", "generate_jobs",
-           "ReservationScheduler", "simulate_queue", "trace_summary"]
+           "ReservationScheduler", "simulate_queue", "NEVER_STARTED",
+           "FailureInjector", "ReplayFailureClass", "DEFAULT_TAXONOMY",
+           "ReplayConfig", "ReplayResult", "replay_trace", "trace_summary"]

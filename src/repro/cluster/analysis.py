@@ -62,13 +62,25 @@ def demand_stats(jobs: list[JobRecord]) -> dict:
 
 
 def queue_stats(jobs: list[JobRecord]) -> dict:
-    """Fig. 6: queueing delay per type (needs simulate_queue first)."""
+    """Fig. 6: queueing delay per type (needs simulate_queue first).
+
+    Jobs that never started carry the ``NEVER_STARTED`` (inf) sentinel;
+    they are excluded from the delay statistics and reported separately so
+    an impossible job can't masquerade as a zero-wait one."""
     by_type = collections.defaultdict(list)
+    never = collections.Counter()
     for j in jobs:
-        by_type[j.jtype].append(j.queue_min)
-    return {t: {"median_min": _median(v),
-                "mean_min": float(np.mean(v))}
-            for t, v in by_type.items()}
+        if np.isfinite(j.queue_min):
+            by_type[j.jtype].append(j.queue_min)
+        else:
+            never[j.jtype] += 1
+    out = {t: {"median_min": _median(v),
+               "mean_min": float(np.mean(v)) if v else 0.0,
+               "n_never_started": int(never.pop(t, 0))}
+           for t, v in by_type.items()}
+    for t, n in never.items():     # types where *no* job ever started
+        out[t] = {"median_min": 0.0, "mean_min": 0.0, "n_never_started": n}
+    return out
 
 
 def status_stats(jobs: list[JobRecord]) -> dict:
@@ -87,9 +99,11 @@ def status_stats(jobs: list[JobRecord]) -> dict:
 def utilization_profile(jobs: list[JobRecord], n_gpus: int,
                         horizon_min: float) -> dict:
     """Fig. 2b-adjacent: time-averaged cluster GPU allocation."""
-    # sweep-line over start/finish events
+    # sweep-line over start/finish events (never-started jobs excluded)
     events = []
     for j in jobs:
+        if not np.isfinite(j.queue_min):
+            continue
         start = j.submit_min + j.queue_min
         events.append((start, j.gpus))
         events.append((start + j.duration_min, -j.gpus))

@@ -1,0 +1,114 @@
+"""Failure taxonomy + injector for cluster trace replay (paper §5, Table 2/3).
+
+The paper characterizes three broad interruption classes that dominate an
+LLM datacenter's lost GPU time; this module models their *incidence*, while
+``repro.core.ft.events`` models their *log signatures*:
+
+  * ``hardware``  — GPU/NVLink/ECC faults. The failed node must be located
+    (two-round allgather sweep, §6.1 design 3) and cordoned; its GPUs leave
+    the schedulable pool until repaired. Table 3: NVLinkError alone accounts
+    for 30% of lost GPU time with a median time-to-failure of 155 min.
+  * ``infra``     — network / storage / connection faults (IB flaps, PFS
+    brownouts). The job dies and restarts, but the node is healthy, so no
+    cordon: only rollback + restart cost is paid.
+  * ``preemption``— best-effort jobs evicted when the pretraining quota
+    reclaims spare capacity (§3.2). No hardware involvement; the job simply
+    loses progress since its last checkpoint and requeues.
+
+Incidence is an inhomogeneous-in-type, homogeneous-in-time Poisson process:
+each class carries a per-GPU-hour hazard rate per job type, so a 1024-GPU
+pretraining job fails ~500x more often than a 2-GPU evaluation — exactly the
+paper's "failures concentrate in pretraining" observation (§5.1). Rates
+below are calibrated so a Kalos-sized six-month trace sees O(Table 3's ~350
+infra+hardware incidents) when replayed at full scale.
+
+``FailureInjector.draw`` samples the next time-to-failure for one execution
+attempt of a job. It is deliberately *per-attempt*: a restarted job re-rolls
+its hazard, matching the memoryless exponential model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Optional, Sequence
+
+HARDWARE, INFRA, PREEMPTION = "hardware", "infra", "preemption"
+
+# job types eligible for periodic checkpointing (the paper's asynchronous
+# checkpoint subsystem, §6.1 design 1, targets long pretraining-class jobs;
+# short eval/debug jobs restart from scratch)
+CHECKPOINTED_TYPES = ("pretrain", "sft", "mllm")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayFailureClass:
+    """One §5 interruption class as seen by the replay engine."""
+    name: str                       # hardware | infra | preemption
+    rate_per_gpu_hour: float        # base exponential hazard
+    jtype_mult: dict                # per-jtype multiplier (0 disables)
+    needs_cordon: bool = False      # run the two-round sweep + cordon a node
+    restart_overhead_min: float = 10.0   # diagnose + reschedule + re-init
+    repair_min: float = 0.0         # cordon duration before GPUs return
+
+    def rate_for(self, jtype: str) -> float:
+        """Hazard in failures per GPU-hour for one job of ``jtype``."""
+        return self.rate_per_gpu_hour * self.jtype_mult.get(jtype, 1.0)
+
+
+# Defaults calibrated against Table 3 (restart_avg column for overheads;
+# NVLink/CUDA/ECC TTF medians for the hardware hazard) and §5.2's "around
+# two failures per day" at ~2.4k-GPU scale.
+DEFAULT_TAXONOMY: tuple[ReplayFailureClass, ...] = (
+    ReplayFailureClass(
+        HARDWARE, rate_per_gpu_hour=6e-5,
+        # evals are too short-lived to hit uncorrectable hardware faults
+        jtype_mult={"evaluation": 0.1, "other": 0.2},
+        needs_cordon=True,
+        restart_overhead_min=30.0,      # Table 3 NVLink restart avg 95.6 min
+        repair_min=24 * 60.0),          # node drained for ~a day
+    ReplayFailureClass(
+        INFRA, rate_per_gpu_hour=1.2e-4,
+        jtype_mult={"evaluation": 0.3},
+        needs_cordon=False,
+        restart_overhead_min=10.0),
+    ReplayFailureClass(
+        PREEMPTION, rate_per_gpu_hour=2.0e-4,
+        # only best-effort (spare-pool) types can be preempted — the
+        # reservation shields pretraining-class jobs (§3.2)
+        jtype_mult={"pretrain": 0.0, "sft": 0.0, "mllm": 0.0},
+        needs_cordon=False,
+        restart_overhead_min=2.0),
+)
+
+BY_CLASS = {c.name: c for c in DEFAULT_TAXONOMY}
+
+
+class FailureInjector:
+    """Seeded sampler of per-attempt failure times for the replay engine.
+
+    ``draw(jtype, gpus, remaining_min)`` returns ``(ttf_min, cls)`` for the
+    earliest injected failure within the attempt's remaining runtime, or
+    ``None`` if the attempt completes cleanly. Sampling is O(#classes) per
+    start event, which keeps million-job replays cheap.
+    """
+
+    def __init__(self, taxonomy: Sequence[ReplayFailureClass] = DEFAULT_TAXONOMY,
+                 *, seed: int = 0, rate_scale: float = 1.0):
+        self.taxonomy = tuple(taxonomy)
+        self.rate_scale = rate_scale
+        self._rng = random.Random(seed ^ 0x5EED)
+
+    def draw(self, jtype: str, gpus: int, remaining_min: float
+             ) -> Optional[tuple[float, ReplayFailureClass]]:
+        best: Optional[tuple[float, ReplayFailureClass]] = None
+        rng = self._rng
+        for cls in self.taxonomy:
+            rate_hr = cls.rate_for(jtype) * gpus * self.rate_scale
+            if rate_hr <= 0.0:
+                continue
+            # exponential TTF in minutes
+            ttf = -math.log(max(rng.random(), 1e-300)) / rate_hr * 60.0
+            if ttf < remaining_min and (best is None or ttf < best[0]):
+                best = (ttf, cls)
+        return best

@@ -10,16 +10,26 @@ Event-driven simulation over the generated job population. Two GPU pools:
 a reserved pool admitting only high-priority types (pretrain/sft/mllm) and a
 spare pool for everything (best-effort). Jobs that can't start queue FIFO
 within their priority class.
+
+``simulate_queue`` is a thin wrapper over the failure-aware replay engine
+(``repro.cluster.replay``) with injection disabled, so the pure queuing
+path and the failure-injected path share one dispatch implementation.
+Jobs that never run (impossible demands, or stuck behind a wedged FIFO
+head in legacy mode) get ``queue_min = NEVER_STARTED`` instead of a
+misleading 0.0.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
-from typing import Iterable, Optional
+import math
 
 from repro.cluster.workload import JobRecord
 
 HIGH_PRIORITY = ("pretrain", "sft", "mllm")
+
+# sentinel queue delay for jobs that never started; keeps them trivially
+# separable from genuinely zero-wait jobs (math.isfinite(queue_min))
+NEVER_STARTED = math.inf
 
 
 @dataclasses.dataclass
@@ -57,45 +67,39 @@ class ReservationScheduler:
         self.free_reserved += r
         self.free_spare += s
 
+    # -- cordon accounting (used by the failure-aware replay) ---------------
+
+    def cordon(self, gpus: int) -> tuple[int, int]:
+        """Remove up to ``gpus`` currently-free GPUs from the pools (a
+        faulty node leaving the cluster). Takes from the reserved pool
+        first. Returns the (reserved, spare) split actually taken, which
+        must be handed back verbatim to :meth:`uncordon`. If fewer than
+        ``gpus`` are free (the node's GPUs were partly re-allocated before
+        the cordon landed), only the free portion is removed."""
+        take_r = min(gpus, self.free_reserved)
+        take_s = min(gpus - take_r, self.free_spare)
+        self.free_reserved -= take_r
+        self.free_spare -= take_s
+        return take_r, take_s
+
+    def uncordon(self, take_r: int, take_s: int) -> None:
+        """Return GPUs removed by :meth:`cordon` (node repaired)."""
+        self.free_reserved += take_r
+        self.free_spare += take_s
+
 
 def simulate_queue(jobs: list[JobRecord], total_gpus: int, *,
-                   reserved_frac: float = 0.85) -> list[JobRecord]:
-    """Fill ``queue_min`` on every job by replaying the trace."""
-    sched = ReservationScheduler(total_gpus, reserved_frac)
-    # event heap: (time, seq, kind, job); kinds: 0=finish first, 1=arrive
-    events: list[tuple[float, int, int, JobRecord]] = []
-    seq = 0
-    for j in jobs:
-        heapq.heappush(events, (j.submit_min, seq, 1, j))
-        seq += 1
-    wait_hi: list[JobRecord] = []
-    wait_lo: list[JobRecord] = []
+                   reserved_frac: float = 0.85, backfill: bool = False,
+                   reject_impossible: bool = True) -> list[JobRecord]:
+    """Fill ``queue_min`` on every job by replaying the trace.
 
-    def try_start(now: float) -> None:
-        nonlocal seq
-        # high-priority first (reservation), then best-effort, both FIFO
-        for q in (wait_hi, wait_lo):
-            i = 0
-            while i < len(q):
-                j = q[i]
-                if sched.can_start(j):
-                    q.pop(i)
-                    sched.start(j)
-                    j.queue_min = now - j.submit_min
-                    heapq.heappush(events,
-                                   (now + j.duration_min, seq, 0, j))
-                    seq += 1
-                else:
-                    # FIFO head-of-line: don't let later jobs jump the queue
-                    break
-            # (only the head blocks; backfill is intentionally off — the
-            #  paper's eval delay comes exactly from this HoL behaviour)
-
-    while events:
-        now, _, kind, job = heapq.heappop(events)
-        if kind == 0:
-            sched.finish(job)
-        else:
-            (wait_hi if job.jtype in HIGH_PRIORITY else wait_lo).append(job)
-        try_start(now)
+    Delegates to the unified replay engine with failure injection disabled;
+    see ``repro.cluster.replay`` for the dispatch mechanics and the
+    ``backfill`` policy. Jobs that never start (e.g. demand exceeds the
+    cluster) are marked with :data:`NEVER_STARTED`.
+    """
+    from repro.cluster.replay import ReplayConfig, replay_trace
+    replay_trace(jobs, total_gpus, reserved_frac=reserved_frac,
+                 config=ReplayConfig(injector=None, backfill=backfill,
+                                     reject_impossible=reject_impossible))
     return jobs

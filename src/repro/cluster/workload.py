@@ -90,11 +90,21 @@ class JobRecord:
     submit_min: float
     duration_min: float          # runtime excluding queueing
     status: str                  # completed | failed | canceled
-    queue_min: float = 0.0       # filled by the scheduler sim
+    queue_min: float = 0.0       # filled by the scheduler sim; inf = never ran
+    # filled by the failure-aware replay (repro.cluster.replay):
+    restarts: int = 0            # injected-failure restarts
+    lost_gpu_min: float = 0.0    # work rolled back to the last checkpoint
+    requeue_wait_min: float = 0.0  # queueing after failures (excl. queue_min)
 
     @property
     def gpu_time(self) -> float:
         return self.gpus * self.duration_min
+
+    @property
+    def started(self) -> bool:
+        """Meaningful after a queue sim: never-started jobs carry an
+        infinite ``queue_min`` sentinel."""
+        return math.isfinite(self.queue_min)
 
 
 def _calibrate_scales(spec: WorkloadSpec, rng: np.random.Generator) -> dict:

@@ -67,6 +67,7 @@ class CheckpointManager:
         self._inflight = 0
         self._lock = threading.Lock()
         self._errors: list[str] = []
+        self._malformed_warned: set[str] = set()
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
@@ -124,10 +125,21 @@ class CheckpointManager:
             return []
         out = []
         for name in os.listdir(self.dir):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                manifest = os.path.join(self.dir, name, "manifest.json")
-                if os.path.exists(manifest):
-                    out.append(int(name.split("_")[1]))
+            if not name.startswith("step_") or name.endswith(".tmp"):
+                continue
+            # stray entries ("step_final", "step_12_copy", editor litter)
+            # must not poison the scan — skip anything whose suffix is not
+            # a plain integer step number
+            suffix = name[len("step_"):]
+            if not suffix.isdigit():
+                if name not in self._malformed_warned:
+                    self._malformed_warned.add(name)
+                    logger.warning("ignoring malformed checkpoint entry %r",
+                                   name)
+                continue
+            manifest = os.path.join(self.dir, name, "manifest.json")
+            if os.path.exists(manifest):
+                out.append(int(suffix))
         return sorted(out)
 
     def restore(self, step: int, template: Params,

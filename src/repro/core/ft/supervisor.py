@@ -136,6 +136,10 @@ class Supervisor:
                 ev = s.event
                 resume_step = ev.rollback_step
                 skip_ranges.append(ev.skip_range)
+                # the job restarts from the *rollback* checkpoint, so its
+                # extra state (loader position, scaler, ...) must come from
+                # that checkpoint too — not linger from the previous attempt
+                resume_extra = self._peek_extra(ev.rollback_step)
                 events.append(RecoveryEvent(
                     attempt, "spike", ev.detect_step,
                     resumed_from=ev.rollback_step,
@@ -161,6 +165,16 @@ class Supervisor:
                 # node loss invalidates that node's RAM cache; a process-level
                 # failure can restart from the in-RAM snapshot (fast path)
                 if diag.needs_node_cordon:
+                    # surviving hosts finish their in-flight background
+                    # persists before the restart point is chosen — without
+                    # this drain, a snapshot taken just before the failure
+                    # may not have landed on disk yet and the job resumes
+                    # from a much older step (or from scratch)
+                    try:
+                        self.ckpt.wait(timeout=60.0)
+                    except TimeoutError:
+                        logger.warning("persist queue did not drain before "
+                                       "restart; resuming from what is on disk")
                     last = self.ckpt.latest_step()
                 else:
                     last = self.ckpt.latest_restorable()

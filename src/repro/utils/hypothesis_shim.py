@@ -1,0 +1,245 @@
+"""Offline stand-in for the ``hypothesis`` property-testing library.
+
+Shim policy
+-----------
+The tier-1 suite property-tests several invariants with ``hypothesis``
+(``@given`` over random schedules, fleets, shard shapes, ...). That package
+is not available in the hermetic offline environment, so this module
+provides the *minimal* API subset those tests use — ``given``, ``settings``
+and the ``strategies`` combinators below — backed by deterministic seeded
+sampling (seed derived from the test's qualified name, so failures are
+reproducible run-to-run and machine-to-machine).
+
+``install()`` registers the shim under the ``hypothesis`` /
+``hypothesis.strategies`` module names **only when the real package is
+missing** (see ``tests/conftest.py``); with real hypothesis installed the
+shim is inert. The shim intentionally does NOT implement shrinking,
+the example database, or health checks — it is a deterministic example
+runner, not a replacement. Tests must restrict themselves to:
+
+    given(**kwargs)                 # keyword strategies only
+    settings(max_examples=, deadline=, ...)
+    assume(condition)
+    strategies.integers / floats / booleans / sampled_from / lists /
+               tuples / sets / just / data
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+import zlib
+from typing import Any, Callable, Optional, Sequence
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by ``assume(False)``; the current example is skipped."""
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+class SearchStrategy:
+    """A strategy is just a seeded draw function."""
+
+    def __init__(self, draw_fn: Callable[[random.Random], Any],
+                 label: str = "strategy"):
+        self._draw = draw_fn
+        self._label = label
+
+    def do_draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"<shim.{self._label}>"
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value),
+                          f"integers({min_value},{max_value})")
+
+
+def floats(min_value: float, max_value: float, **_ignored) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value),
+                          f"floats({min_value},{max_value})")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.getrandbits(1)), "booleans")
+
+
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value, "just")
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    elements = list(elements)
+    if not elements:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return SearchStrategy(lambda rng: rng.choice(elements), "sampled_from")
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: Optional[int] = None) -> SearchStrategy:
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rng: random.Random) -> list:
+        n = rng.randint(min_size, hi)
+        return [elements.do_draw(rng) for _ in range(n)]
+
+    return SearchStrategy(draw, "lists")
+
+
+def tuples(*elements: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(e.do_draw(rng) for e in elements), "tuples")
+
+
+def sets(elements: SearchStrategy, *, min_size: int = 0,
+         max_size: Optional[int] = None) -> SearchStrategy:
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rng: random.Random) -> set:
+        target = rng.randint(min_size, hi)
+        out: set = set()
+        # the element domain may be smaller than ``target``; bound attempts
+        for _ in range(max(20 * (target + 1), 50)):
+            if len(out) >= target:
+                break
+            out.add(elements.do_draw(rng))
+        return out
+
+    return SearchStrategy(draw, "sets")
+
+
+class DataObject:
+    """Interactive draws inside a test body (``data.draw(strategy)``)."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: SearchStrategy, label: str = "") -> Any:
+        return strategy.do_draw(self._rng)
+
+
+class _DataStrategy(SearchStrategy):
+    def __init__(self):
+        super().__init__(lambda rng: DataObject(rng), "data")
+
+
+def data() -> SearchStrategy:
+    return _DataStrategy()
+
+
+# ---------------------------------------------------------------------------
+# given / settings
+# ---------------------------------------------------------------------------
+
+def given(*args: SearchStrategy, **kwargs: SearchStrategy):
+    """Keyword-strategy decorator. Each example draws every strategy from a
+    ``random.Random`` seeded by (test qualname, example index), so the run
+    is fully deterministic. Parameters not supplied by strategies stay in
+    the wrapper's signature for pytest fixture injection."""
+    if args:
+        raise TypeError("the hypothesis shim supports keyword strategies "
+                        "only, e.g. @given(n=st.integers(0, 5))")
+
+    def decorate(fn: Callable) -> Callable:
+        sig = inspect.signature(fn)
+        missing = set(kwargs) - set(sig.parameters)
+        if missing:
+            raise TypeError(f"@given got unexpected arguments {missing} "
+                            f"for {fn.__name__}{sig}")
+        fixture_params = [p for name, p in sig.parameters.items()
+                          if name not in kwargs]
+        base_seed = zlib.crc32(
+            f"{fn.__module__}.{fn.__qualname__}".encode()) & 0xFFFFFFFF
+
+        def wrapper(*fargs, **fkwargs):
+            cfg = getattr(wrapper, "_shim_config", {})
+            max_examples = cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            for i in range(max_examples):
+                rng = random.Random(base_seed * 100_003 + i)
+                drawn = {name: strat.do_draw(rng)
+                         for name, strat in kwargs.items()}
+                try:
+                    fn(*fargs, **fkwargs, **drawn)
+                except UnsatisfiedAssumption:
+                    continue
+                except Exception:
+                    shown = {k: v for k, v in drawn.items()
+                             if not isinstance(v, DataObject)}
+                    print(f"\nFalsifying example ({fn.__qualname__}, "
+                          f"example {i}): {shown}", file=sys.stderr)
+                    raise
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = sig.replace(parameters=fixture_params)
+        wrapper._shim_config = dict(
+            getattr(fn, "_shim_config_pending", {}))  # settings-under-given
+        wrapper._shim_given = dict(kwargs)
+        return wrapper
+
+    return decorate
+
+
+def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+             deadline: Any = None, **_ignored):
+    """Records ``max_examples``; ``deadline`` and everything else is a
+    no-op in the shim. Works above or below ``@given``."""
+
+    def decorate(fn: Callable) -> Callable:
+        if hasattr(fn, "_shim_config"):          # settings over given
+            fn._shim_config["max_examples"] = max_examples
+        else:                                     # given over settings
+            pending = dict(getattr(fn, "_shim_config_pending", {}))
+            pending["max_examples"] = max_examples
+            fn._shim_config_pending = pending
+        return fn
+
+    return decorate
+
+
+# ---------------------------------------------------------------------------
+# installation
+# ---------------------------------------------------------------------------
+
+def install(force: bool = False) -> bool:
+    """Register the shim as ``hypothesis`` in ``sys.modules``.
+
+    Returns True when the shim was installed, False when the real package
+    exists (the shim then stays out of the way). Idempotent."""
+    if not force:
+        try:
+            import hypothesis
+            return bool(getattr(hypothesis, "__shim__", False))
+        except ImportError:
+            pass
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "just", "sampled_from",
+                 "lists", "tuples", "sets", "data", "SearchStrategy"):
+        setattr(strategies, name, globals()[name])
+    hyp = types.ModuleType("hypothesis")
+    hyp.__doc__ = __doc__
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = strategies
+    hyp.__shim__ = True
+    hyp.__version__ = "0.0-repro-shim"
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies
+    return True

@@ -2,6 +2,16 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+# Hermetic offline runs: several test modules property-test with
+# ``hypothesis``; when the real package is missing, install the
+# deterministic shim (see repro.utils.hypothesis_shim for the policy)
+# BEFORE those modules are collected.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from repro.utils.hypothesis_shim import install as _install_hyp_shim
+    _install_hyp_shim()
+
 from repro.config import AttentionConfig, ModelConfig, ParallelConfig
 
 

@@ -97,3 +97,22 @@ def test_elastic_restore_resharded(tmp_path):
     assert tree_allclose(state, restored)
     leaf = restored["w"]
     assert leaf.sharding.spec == P("data")
+
+
+def test_available_steps_skips_malformed_entries(tmp_path):
+    """Stray step_* litter (editor backups, aborted copies, human notes)
+    must not poison the directory scan with a ValueError."""
+    mgr = CheckpointManager(str(tmp_path), keep=8)
+    mgr.save_sync(5, _state())
+    mgr.save_sync(12, _state())
+    for junk in ("step_final", "step_12_copy", "step_", "step_abc"):
+        d = os.path.join(str(tmp_path), junk)
+        os.makedirs(d)
+        with open(os.path.join(d, "manifest.json"), "w") as f:
+            f.write("{}")
+    # a plain *file* named step_<int> (no manifest inside) is skipped too
+    with open(os.path.join(str(tmp_path), "step_99"), "w") as f:
+        f.write("not a checkpoint")
+    assert mgr.available_steps() == [5, 12]
+    assert mgr.latest_step() == 12
+    mgr.close()

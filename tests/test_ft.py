@@ -177,3 +177,38 @@ def test_supervisor_surfaces_script_errors(tmp_path):
     assert rep.completed
     assert rep.manual_interventions == 1       # script bugs page a human
     assert seen and not seen[0].auto_recoverable
+
+
+def test_spike_rollback_refreshes_resume_extra(tmp_path):
+    """Regression: after a SpikeInterrupt rollback, the next attempt's
+    resume_extra must come from the *rollback* checkpoint, not linger from
+    the attempt that spiked."""
+    from repro.core.ft.checkpoint import CheckpointManager
+    from repro.core.ft.spike import SpikeEvent
+    from repro.core.ft.supervisor import SpikeInterrupt, Supervisor
+
+    ckpt = CheckpointManager(str(tmp_path), keep=8, ram_cache_slots=8)
+    sup = Supervisor(ckpt, FailureDiagnosisSystem(), SimulatedFleet(4))
+    seen_extra = []
+    spiked = []
+
+    def job(ctx):
+        seen_extra.append(dict(ctx.resume_extra))
+        for step in range(ctx.start_step, 60):
+            if step % 10 == 0:
+                ckpt.save_async(step, {"step": np.int64(step)},
+                                extra={"data_step": step})
+            if step == 37 and not spiked:
+                spiked.append(step)
+                raise SpikeInterrupt(SpikeEvent(
+                    onset_step=35, detect_step=37, rollback_step=20,
+                    skip_range=(30, 40), baseline=2.0, peak=9.0))
+        return 60
+
+    rep = sup.run(job)
+    ckpt.wait()
+    ckpt.close()
+    assert rep.completed and rep.final_step == 60
+    # attempt 0 starts fresh; attempt 1 must resume with step-20 extras
+    assert seen_extra[0] == {}
+    assert seen_extra[1] == {"data_step": 20}

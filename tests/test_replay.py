@@ -1,0 +1,259 @@
+"""Failure-aware trace replay: exact parity with simulate_queue, capacity
+conservation under injected failures, rollback accounting, the two-round
+cordon path, backfill, and the never-started sentinel."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import (DEFAULT_TAXONOMY, KALOS, NEVER_STARTED,
+                           FailureInjector, ReplayConfig, ReplayFailureClass,
+                           generate_jobs, replay_trace, simulate_queue)
+from repro.cluster.failures import HARDWARE, INFRA, PREEMPTION
+from repro.cluster.workload import JobRecord
+
+
+class ScriptedInjector:
+    """Deterministic injector: pops pre-scripted (ttf, cls) draws."""
+
+    def __init__(self, script):
+        self.script = list(script)
+
+    def draw(self, jtype, gpus, remaining_min):
+        if not self.script:
+            return None
+        hit = self.script.pop(0)
+        if hit is None:
+            return None
+        ttf, cls = hit
+        return (ttf, cls) if ttf < remaining_min else None
+
+
+def _random_jobs(rng, n, gpus_max, jtypes=("evaluation", "pretrain", "debug")):
+    return [JobRecord(i, str(rng.choice(list(jtypes))),
+                      int(rng.integers(1, gpus_max + 1)),
+                      float(rng.uniform(0, 200)),
+                      float(rng.uniform(0.1, 30)), "completed")
+            for i in range(n)]
+
+
+def _assert_capacity_conserved(segments, total_gpus):
+    events = []
+    for _, gpus, t0, t1, _ in segments:
+        assert t1 >= t0
+        events.append((round(t0, 6), 1, gpus))
+        events.append((round(t1, 6), 0, -gpus))   # frees before same-t starts
+    events.sort()
+    used = 0
+    for _, _, d in events:
+        used += d
+        assert used <= total_gpus
+    assert used == 0
+
+
+# --- parity ------------------------------------------------------------------
+
+def test_disabled_injection_matches_simulate_queue():
+    """replay_trace(injector=None) IS simulate_queue — bit-exact delays."""
+    jobs = generate_jobs(KALOS, seed=3, n_jobs=4000)
+    simulate_queue(jobs, KALOS.n_gpus, reserved_frac=0.9)
+    base = [j.queue_min for j in jobs]
+    # a failure-injected replay in between must not perturb a later clean one
+    replay_trace(jobs, KALOS.n_gpus, reserved_frac=0.9,
+                 config=ReplayConfig(injector=FailureInjector(seed=7)))
+    replay_trace(jobs, KALOS.n_gpus, reserved_frac=0.9, config=ReplayConfig())
+    assert [j.queue_min for j in jobs] == base
+    assert all(j.restarts == 0 and j.lost_gpu_min == 0.0 for j in jobs)
+
+
+# --- conservation under failures (property) ----------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(20, 120), gpus=st.integers(8, 48),
+       seed=st.integers(0, 50), rate=st.floats(0.0, 0.5))
+def test_injected_replay_conserves_capacity(n, gpus, seed, rate):
+    """For ANY small trace and failure rate: GPU usage never exceeds the
+    cluster, waits are non-negative, and accounting fields stay sane."""
+    rng = np.random.default_rng(seed)
+    jobs = _random_jobs(rng, n, gpus)
+    inj = FailureInjector(seed=seed, rate_scale=rate * 5e3)
+    res = replay_trace(jobs, gpus, reserved_frac=0.6,
+                       config=ReplayConfig(injector=inj, node_gpus=4,
+                                           record_segments=True, seed=seed))
+    _assert_capacity_conserved(res.segments, gpus)
+    killed = set(res.killed_job_ids)
+    finished = {s[0] for s in res.segments if s[4] == "finish"}
+    for j in jobs:
+        assert j.queue_min >= 0 and j.requeue_wait_min >= 0
+        assert j.lost_gpu_min >= 0
+        assert j.restarts <= 1 + ReplayConfig.max_restarts
+        # every job either finishes or exhausts its restart budget
+        assert (j.job_id in finished) != (j.job_id in killed)
+        if j.job_id in killed:
+            assert j.restarts == 1 + ReplayConfig.max_restarts
+    # every injected failure is accounted as exactly one restart attempt
+    assert sum(s.failures for s in res.by_class.values()) \
+        == res.total_restarts
+
+
+# --- rollback accounting -----------------------------------------------------
+
+def test_checkpoint_rollback_accounting_exact():
+    """A pretrain job failing at minute 50 with a 30-min checkpoint cadence
+    loses exactly 20 minutes of work and resumes from minute 30."""
+    infra = next(c for c in DEFAULT_TAXONOMY if c.name == INFRA)
+    job = JobRecord(0, "pretrain", 8, 0.0, 100.0, "completed")
+    inj = ScriptedInjector([(50.0, infra), None])
+    res = replay_trace([job], 16, reserved_frac=0.5,
+                       config=ReplayConfig(injector=inj,
+                                           checkpoint_interval_min=30.0,
+                                           record_segments=True))
+    assert job.restarts == 1
+    assert job.lost_gpu_min == pytest.approx(20.0 * 8)
+    assert res.by_class[INFRA].failures == 1
+    # run 0..50 (fail), requeue after overhead, run the remaining 70 min
+    (id0, _, s0, e0, k0), (id1, _, s1, e1, k1) = res.segments
+    assert (k0, k1) == ("fail", "finish")
+    assert (s0, e0) == (0.0, 50.0)
+    assert s1 == pytest.approx(50.0 + infra.restart_overhead_min)
+    assert e1 - s1 == pytest.approx(100.0 - 30.0)
+
+
+def test_uncheckpointed_type_restarts_from_scratch():
+    infra = next(c for c in DEFAULT_TAXONOMY if c.name == INFRA)
+    job = JobRecord(0, "debug", 2, 0.0, 40.0, "completed")
+    inj = ScriptedInjector([(25.0, infra), None])
+    res = replay_trace([job], 8,
+                       config=ReplayConfig(injector=inj,
+                                           record_segments=True))
+    assert job.lost_gpu_min == pytest.approx(25.0 * 2)   # all progress lost
+    assert res.segments[-1][3] - res.segments[-1][2] == pytest.approx(40.0)
+
+
+def test_max_restarts_kills_job():
+    infra = next(c for c in DEFAULT_TAXONOMY if c.name == INFRA)
+    job = JobRecord(0, "debug", 1, 0.0, 50.0, "completed")
+    inj = ScriptedInjector([(10.0, infra)] * 3)
+    res = replay_trace([job], 8,
+                       config=ReplayConfig(injector=inj, max_restarts=2,
+                                           record_segments=True))
+    assert res.killed_job_ids == [0]
+    assert job.restarts == 3
+    assert not any(s[4] == "finish" for s in res.segments)
+
+
+# --- cordon path -------------------------------------------------------------
+
+def test_hardware_failure_triggers_two_round_cordon():
+    hw = next(c for c in DEFAULT_TAXONOMY if c.name == HARDWARE)
+    cls = ReplayFailureClass(HARDWARE, rate_per_gpu_hour=hw.rate_per_gpu_hour,
+                             jtype_mult={}, needs_cordon=True,
+                             restart_overhead_min=5.0, repair_min=60.0)
+    job = JobRecord(0, "pretrain", 16, 0.0, 120.0, "completed")
+    inj = ScriptedInjector([(30.0, cls), None])
+    res = replay_trace([job], 32,
+                       config=ReplayConfig(injector=inj, node_gpus=8,
+                                           record_segments=True))
+    assert res.cordon_events == 1
+    assert res.detection_probes > 0        # the §6.1 sweep actually ran
+    assert any(s[4] == "finish" for s in res.segments)   # job still completes
+
+
+def test_cordon_shrinks_then_repair_restores_capacity():
+    """While a node is cordoned, a full-cluster job cannot start; after the
+    repair event it can."""
+    cls = ReplayFailureClass(HARDWARE, 1.0, {}, needs_cordon=True,
+                             restart_overhead_min=1.0, repair_min=500.0)
+    first = JobRecord(0, "pretrain", 8, 0.0, 50.0, "completed")
+    full = JobRecord(1, "pretrain", 32, 60.0, 10.0, "completed")
+    inj = ScriptedInjector([(20.0, cls), None, None])
+    res = replay_trace([first, full], 32,
+                       config=ReplayConfig(injector=inj, node_gpus=8,
+                                           max_cordon_frac=0.5,
+                                           record_segments=True))
+    assert res.cordon_events == 1
+    # the 32-GPU job must wait for the repair at t = 20 + 500
+    start_full = next(s[2] for s in res.segments if s[0] == 1)
+    assert start_full >= 520.0
+    assert full.queue_min == pytest.approx(start_full - 60.0)
+
+
+def test_preemption_never_hits_reserved_types():
+    pre = next(c for c in DEFAULT_TAXONOMY if c.name == PREEMPTION)
+    assert pre.rate_for("pretrain") == 0.0
+    assert pre.rate_for("sft") == 0.0
+    assert pre.rate_for("evaluation") > 0.0
+
+
+# --- failure impact on the paper's metrics -----------------------------------
+
+def test_failures_cost_gpu_hours_and_restarts():
+    jobs = generate_jobs(KALOS, seed=0, n_jobs=20_000)
+    res = replay_trace(jobs, KALOS.n_gpus, reserved_frac=0.97,
+                       config=ReplayConfig(
+                           injector=FailureInjector(seed=1, rate_scale=4.0)))
+    s = res.summary()
+    assert s["total_restarts"] > 0
+    assert s["total_lost_gpu_hours"] > 0
+    # pretraining dominates lost GPU time (paper §5.1)
+    lost = s["lost_gpu_hours_by_jtype"]
+    assert lost["pretrain"]["gpu_hours"] >= max(
+        v["gpu_hours"] for t, v in lost.items() if t != "pretrain")
+    # and the injected classes all appear in the JSON-ready breakdown
+    assert set(s["lost_gpu_hours_by_class"]) >= {HARDWARE, INFRA}
+
+
+# --- backfill ----------------------------------------------------------------
+
+def test_backfill_never_worse_for_eval_and_conserves():
+    jobs = generate_jobs(KALOS, seed=2, n_jobs=8000)
+    simulate_queue(jobs, KALOS.n_gpus, reserved_frac=0.97)
+    fifo_eval = np.median([j.queue_min for j in jobs
+                           if j.jtype == "evaluation"])
+    res = replay_trace(jobs, KALOS.n_gpus, reserved_frac=0.97,
+                       config=ReplayConfig(backfill=True,
+                                           record_segments=True))
+    _assert_capacity_conserved(res.segments, KALOS.n_gpus)
+    bf_eval = np.median([j.queue_min for j in jobs
+                         if j.jtype == "evaluation"])
+    assert bf_eval <= fifo_eval
+    assert all(j.started for j in jobs)
+
+
+# --- never-started sentinel --------------------------------------------------
+
+def test_impossible_job_rejected_with_warning(caplog):
+    jobs = [JobRecord(0, "pretrain", 128, 0.0, 10.0, "completed"),
+            JobRecord(1, "pretrain", 16, 1.0, 10.0, "completed")]
+    with caplog.at_level("WARNING", logger="repro"):
+        res = replay_trace(jobs, 64, config=ReplayConfig())
+    assert any("rejected" in r.message for r in caplog.records)
+    assert res.rejected_job_ids == [0]
+    assert jobs[0].queue_min == NEVER_STARTED
+    assert not jobs[0].started
+    assert jobs[1].started and jobs[1].queue_min == pytest.approx(0.0)
+
+
+def test_wedged_head_marks_blocked_jobs_never_started():
+    """Legacy mode (no rejection): an impossible FIFO head wedges its class;
+    everything stuck behind it surfaces as NEVER_STARTED, not 0.0."""
+    jobs = [JobRecord(0, "pretrain", 128, 0.0, 10.0, "completed"),
+            JobRecord(1, "pretrain", 16, 1.0, 10.0, "completed"),
+            JobRecord(2, "evaluation", 2, 2.0, 5.0, "completed")]
+    replay_trace(jobs, 64,
+                 config=ReplayConfig(reject_impossible=False))
+    assert jobs[0].queue_min == NEVER_STARTED
+    assert jobs[1].queue_min == NEVER_STARTED   # stuck behind the wedge
+    assert jobs[2].started                       # other class unaffected
+
+
+def test_queue_stats_excludes_never_started():
+    from repro.cluster.analysis import queue_stats
+    jobs = [JobRecord(0, "evaluation", 2, 0.0, 5.0, "completed",
+                      queue_min=4.0),
+            JobRecord(1, "evaluation", 2, 0.0, 5.0, "completed",
+                      queue_min=NEVER_STARTED)]
+    q = queue_stats(jobs)
+    assert q["evaluation"]["median_min"] == 4.0    # inf filtered out
+    assert q["evaluation"]["n_never_started"] == 1
