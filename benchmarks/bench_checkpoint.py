@@ -38,8 +38,11 @@ def run(fast: bool = False) -> list[Row]:
         with tempfile.TemporaryDirectory() as d:
             mgr = CheckpointManager(d, keep=1,
                                     storage_bandwidth_gbps=BW_GBPS)
-            t_sync = min(mgr.save_sync(1, state) for _ in range(2))
-            t_async = min(mgr.save_async(s, state) for s in (2, 3))
+            # min-of-3: the stall-reduction ratio feeds the CI perf gate
+            # (benchmarks.check_regression), so scheduler jitter in the
+            # small async numbers must not masquerade as a regression
+            t_sync = min(mgr.save_sync(1, state) for _ in range(3))
+            t_async = min(mgr.save_async(s, state) for s in (2, 3, 4))
             mgr.wait(timeout=600)
             mgr.close()
         ratio = t_sync / max(t_async, 1e-9)

@@ -1,0 +1,125 @@
+"""CI perf-regression gate over the benchmark artifacts.
+
+Compares a freshly produced ``--fast`` benchmark run against the committed
+baselines in ``artifacts/bench/`` and fails (exit 1) on a >25% throughput
+regression in the gated benches:
+
+  * ``replay``     — ``events_per_calib``: the fixed 100k-job injected
+    replay probe's events/s divided by the interleaved same-window CPU
+    calibration (``benchmarks.common.calibration_chunk``), so the number
+    survives both a change of runner class and bursty CPU contention;
+  * ``detection``  — two-round sweep probe savings vs naive pairwise
+    (deterministic, seeded: any drop is a real algorithmic regression);
+  * ``checkpoint`` — sync/async stall-reduction ratios (a ratio of two
+    same-machine timings, so machine speed cancels).
+
+Usage (what ``.github/workflows/ci.yml`` runs after the fast bench step):
+
+  REPRO_BENCH_DIR=artifacts/bench-fresh python -m benchmarks.run --fast
+  python -m benchmarks.check_regression \
+      --fresh artifacts/bench-fresh --baseline artifacts/bench
+
+A metric missing from the baseline is reported and skipped (new benches
+must not fail the gate retroactively); a metric missing from the fresh run
+fails it (the bench should have produced it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Optional
+
+# bench -> [(metric, direction, tolerance)]; direction "higher" = bigger is
+# better; tolerance None = the run's --tolerance (default 25%). The
+# checkpoint stall-reduction ratio pits a ~2 s sync save against a ~0.1 s
+# async snapshot, and the small denominator swings up to ~2x under runner
+# CPU contention even with min-of-3 sampling — so it gets a wider band
+# that still catches the real failure mode (losing the async path
+# collapses the ratio from ~15-25x to ~1x).
+GATES: dict[str, list[tuple[str, str, Optional[float]]]] = {
+    "replay": [("events_per_calib", "higher", None)],
+    "detection": [("n128_probe_savings", "higher", None),
+                  ("n512_probe_savings", "higher", None)],
+    "checkpoint": [("7B-analog_stall_reduction", "higher", 0.5),
+                   ("123B-analog_stall_reduction", "higher", 0.5)],
+}
+
+DEFAULT_TOLERANCE = 0.25
+
+
+def _load_rows(path: str) -> dict[str, float]:
+    with open(path) as f:
+        return {r["metric"]: float(r["value"]) for r in json.load(f)}
+
+
+def check(fresh_dir: str, baseline_dir: str,
+          tolerance: float = DEFAULT_TOLERANCE) -> list[str]:
+    """Return the list of failure messages (empty = gate passes)."""
+    failures: list[str] = []
+    print(f"perf-regression gate: fresh={fresh_dir} baseline={baseline_dir} "
+          f"tolerance={tolerance:.0%}")
+    for bench, metrics in GATES.items():
+        fresh_path = os.path.join(fresh_dir, f"{bench}.json")
+        base_path = os.path.join(baseline_dir, f"{bench}.json")
+        if not os.path.exists(fresh_path):
+            failures.append(f"{bench}: fresh artifact missing ({fresh_path})")
+            continue
+        if not os.path.exists(base_path):
+            print(f"  {bench}: no committed baseline, skipped")
+            continue
+        fresh = _load_rows(fresh_path)
+        base = _load_rows(base_path)
+        for metric, direction, tol_override in metrics:
+            tol = tolerance if tol_override is None else tol_override
+            if metric not in fresh:
+                failures.append(f"{bench}.{metric}: missing from fresh run")
+                continue
+            if metric not in base:
+                print(f"  {bench}.{metric}: not in baseline, skipped")
+                continue
+            f_val, b_val = fresh[metric], base[metric]
+            if b_val <= 0:
+                print(f"  {bench}.{metric}: degenerate baseline "
+                      f"({b_val:.4g}), skipped")
+                continue
+            if direction == "higher":
+                ratio = f_val / b_val
+            else:
+                ratio = b_val / f_val if f_val > 0 else 0.0
+            bad = ratio < 1.0 - tol
+            verdict = "REGRESSION" if bad else "ok"
+            print(f"  {bench}.{metric}: fresh={f_val:.4g} base={b_val:.4g} "
+                  f"({ratio:.2f}x of baseline, tolerance {tol:.0%}) "
+                  f"{verdict}")
+            if bad:
+                failures.append(
+                    f"{bench}.{metric} regressed to {ratio:.2f}x of the "
+                    f"baseline ({f_val:.4g} vs {b_val:.4g}, "
+                    f"tolerance {tol:.0%})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default=os.environ.get(
+        "REPRO_BENCH_DIR", "artifacts/bench-fresh"),
+        help="directory with the freshly produced bench JSON")
+    ap.add_argument("--baseline", default="artifacts/bench",
+                    help="directory with the committed baselines")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="allowed fractional regression (default 0.25)")
+    args = ap.parse_args(argv)
+    failures = check(args.fresh, args.baseline, args.tolerance)
+    if failures:
+        print("\nperf-regression gate FAILED:")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print("perf-regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

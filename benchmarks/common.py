@@ -1,12 +1,35 @@
-"""Benchmark plumbing: result rows + artifact output."""
+"""Benchmark plumbing: result rows, artifact output, CPU calibration."""
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import json
 import os
+import random
+import time
 from typing import Any, Optional
 
 ARTIFACTS = os.environ.get("REPRO_BENCH_DIR", "artifacts/bench")
+
+
+def calibration_chunk(n: int = 300_000) -> tuple[int, float]:
+    """One fixed seeded heap-push/pop burst (the replay engine's inner-loop
+    shape); returns ``(ops, seconds)``. Callers interleave these chunks
+    with the workload they are measuring and ratio the *windowed* rates:
+    throughput divided by the same-window calibration is roughly
+    machine-invariant AND robust to bursty CPU contention, which is what
+    lets ``check_regression`` compare a fresh CI run against baselines
+    recorded on a different runner class."""
+    rng = random.Random(0)
+    rand = rng.random
+    heappush, heappop = heapq.heappush, heapq.heappop
+    h: list = []
+    t0 = time.perf_counter()
+    for i in range(n):
+        heappush(h, (rand(), i))
+        if len(h) > 512:
+            heappop(h)
+    return n, time.perf_counter() - t0
 
 
 @dataclasses.dataclass

@@ -1,22 +1,32 @@
-"""§3.2 + §5 end-to-end: failure-aware replay of the 6-month Kalos trace.
+"""§3.2 + §5 + §6 end-to-end: diagnosis-in-the-loop replay of the Kalos trace.
 
-Walkthrough of the replay subsystem (``repro.cluster.replay``), the first
-piece that exercises scheduling and fault tolerance in one scenario:
+Walkthrough of the replay subsystem (``repro.cluster.replay``), the piece
+that exercises scheduling and fault tolerance in one scenario:
 
   1. generate the synthetic Acme job population (``workload.generate_jobs``);
   2. replay it through the ``ReservationScheduler`` *without* failures —
      this is exactly ``simulate_queue`` (the two share one engine);
-  3. replay it again with the §5 interruption taxonomy injected
-     (hardware / infra / preemption, per-jtype incidence): running jobs are
-     interrupted, hardware faults run the §6.1 two-round detection sweep
-     and cordon the node, progress rolls back to the last periodic
-     checkpoint, and the job requeues with its remaining work;
-  4. compare the two worlds: extra queueing, restart counts, lost GPU
-     hours by class and type (the paper's Figs. 13-14 / Table 2 analogues);
-  5. optionally flip on the greedy backfill policy to see how much of the
-     eval delay is pure head-of-line blocking.
+  3. replay it again with the §5 interruption taxonomy injected AND the
+     §6.1 diagnosis loop closed: every injected failure synthesizes its log
+     snippet (``failures.synthesize_failure_log``), the ``core/ft``
+     pipeline (LogCompressor → rules → Failure Agent) diagnoses it, and the
+     verdict picks the recovery policy —
 
-  PYTHONPATH=src python examples/replay_trace.py [--jobs N] [--backfill]
+       hardware  -> cordon + requeue, or *elastic shrink* with --elastic:
+                    drop the failed node, keep running narrower with the
+                    remaining runtime stretched, regrow at the repair;
+       transient -> in-place restart (keep the allocation, pay overhead);
+       user      -> requeue for a human to fix;
+
+  4. compare the two worlds: extra queueing, restart counts, lost GPU
+     hours by class/type/policy, per-verdict diagnosis breakdowns (the
+     paper's Figs. 13-14 / Table 2 analogues);
+  5. optionally flip on a backfill policy to see how much of the eval
+     delay is pure head-of-line blocking: ``--backfill greedy`` may delay
+     the queue head, ``--backfill easy`` (conservative) never does.
+
+  PYTHONPATH=src python examples/replay_trace.py \
+      [--jobs N] [--elastic] [--backfill {greedy,easy}]
 """
 import argparse
 import time
@@ -24,7 +34,7 @@ import time
 import numpy as np
 
 from repro.cluster import (KALOS, FailureInjector, ReplayConfig,
-                           generate_jobs, replay_trace)
+                           generate_jobs, recovery_stats, replay_trace)
 
 
 def _queue_medians(jobs) -> dict:
@@ -40,8 +50,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--jobs", type=int, default=100_000,
                     help="synthetic trace size (default 100k)")
-    ap.add_argument("--backfill", action="store_true",
-                    help="also replay with the greedy backfill policy")
+    ap.add_argument("--elastic", action="store_true",
+                    help="let hardware-verdict jobs shrink elastically "
+                         "instead of requeueing")
+    ap.add_argument("--backfill", choices=["greedy", "easy"], default=None,
+                    help="also replay with a backfill policy")
     ap.add_argument("--rate-scale", type=float, default=2.0,
                     help="multiplier on the §5 incidence rates")
     args = ap.parse_args()
@@ -58,12 +71,13 @@ def main() -> None:
     for t, m in sorted(clean_medians.items(), key=lambda kv: -kv[1]):
         print(f"  queue median {t:12s} {m:7.2f} min")
 
-    print("\n=== world 2: §5 failure taxonomy injected ===")
+    print("\n=== world 2: §5 failures + §6.1 diagnosis-in-the-loop ===")
     t0 = time.perf_counter()
     res = replay_trace(
         jobs, KALOS.n_gpus, reserved_frac=0.97,
         config=ReplayConfig(
-            injector=FailureInjector(seed=1, rate_scale=args.rate_scale)))
+            injector=FailureInjector(seed=1, rate_scale=args.rate_scale),
+            diagnose=True, elastic=args.elastic))
     print(f"replayed in {time.perf_counter() - t0:.1f}s "
           f"({res.events_processed} events)")
     s = res.summary()
@@ -76,6 +90,28 @@ def main() -> None:
               f"{v['restart_overhead_min']:7.0f} min restart overhead")
     print(f"  cordons: {s['cordon_events']} nodes "
           f"({s['detection_probes']} two-round detection probes)")
+
+    rec = recovery_stats(res)
+    print("  diagnosis verdicts per injected class "
+          f"({rec['incidents']} incidents, "
+          f"{res.diagnosis_pipeline_runs} pipeline runs):")
+    for cls_name, verdicts in rec["diagnosis_verdicts"].items():
+        mix = "  ".join(f"{v}={d['count']} ({d['frac']:.0%})"
+                        for v, d in verdicts.items())
+        print(f"    {cls_name:10s} -> {mix}")
+    if rec["hardware_verdict_recall"] is not None:
+        print(f"  hardware-verdict recall: "
+              f"{rec['hardware_verdict_recall']:.1%} "
+              f"(paper target: correctly cordon real node faults)")
+    print("  recovery policies the verdicts picked:")
+    for p, d in rec["policies"].items():
+        print(f"    {p:10s} {d['count']:5d} ({d['frac']:5.1%})  "
+              f"{d['gpu_hours_lost']:9.1f} GPUh lost  "
+              f"{d['restart_overhead_min']:7.0f} min overhead")
+    if args.elastic:
+        e = rec["elastic"]
+        print(f"  elastic: {e['shrinks']} shrinks, {e['regrows']} regrows "
+              f"(width restored at repair)")
     print("  extra queueing vs clean world (requeue waits included):")
     for t, v in s["queue_delay_quantiles"].items():
         extra = [j.requeue_wait_min for j in jobs if j.jtype == t]
@@ -83,9 +119,10 @@ def main() -> None:
               f"min; mean requeue wait {np.mean(extra):6.2f} min")
 
     if args.backfill:
-        print("\n=== world 3: greedy backfill instead of head-of-line ===")
+        print(f"\n=== world 3: {args.backfill} backfill instead of "
+              f"head-of-line ===")
         replay_trace(jobs, KALOS.n_gpus, reserved_frac=0.97,
-                     config=ReplayConfig(backfill=True))
+                     config=ReplayConfig(backfill=args.backfill))
         for t, m in sorted(_queue_medians(jobs).items(), key=lambda kv: -kv[1]):
             d = m - clean_medians[t]
             print(f"  queue median {t:12s} {m:7.2f} min ({d:+.2f} vs FIFO)")

@@ -5,11 +5,15 @@ from repro.cluster.workload import (JobRecord, WorkloadSpec, KALOS, SEREN,
 from repro.cluster.scheduler import (NEVER_STARTED, ReservationScheduler,
                                      simulate_queue)
 from repro.cluster.failures import (DEFAULT_TAXONOMY, FailureInjector,
-                                    ReplayFailureClass)
-from repro.cluster.replay import ReplayConfig, ReplayResult, replay_trace
-from repro.cluster.analysis import trace_summary
+                                    ReplayFailureClass,
+                                    synthesize_failure_log)
+from repro.cluster.replay import (DiagnosisLoop, ReplayConfig, ReplayResult,
+                                  replay_trace)
+from repro.cluster.analysis import recovery_stats, trace_summary
 
 __all__ = ["JobRecord", "WorkloadSpec", "KALOS", "SEREN", "generate_jobs",
            "ReservationScheduler", "simulate_queue", "NEVER_STARTED",
            "FailureInjector", "ReplayFailureClass", "DEFAULT_TAXONOMY",
-           "ReplayConfig", "ReplayResult", "replay_trace", "trace_summary"]
+           "synthesize_failure_log", "DiagnosisLoop",
+           "ReplayConfig", "ReplayResult", "replay_trace",
+           "recovery_stats", "trace_summary"]

@@ -119,6 +119,43 @@ def utilization_profile(jobs: list[JobRecord], n_gpus: int,
             "peak_allocation": peak}
 
 
+def recovery_stats(result) -> dict:
+    """§6 analogue: how injected failures were recovered, per applied policy
+    and per diagnosis verdict (needs a ``replay_trace`` ReplayResult).
+
+    Complements the queue/lost-GPU views above with the recovery side:
+    which share of incidents each policy absorbed, the GPU-hours it cost,
+    and — with diagnosis-in-the-loop enabled — the per-injected-class
+    verdict mix plus the hardware-verdict hit rate (the paper's diagnosis
+    accuracy headline for node faults).
+    """
+    total = sum(result.policies.values()) or 1
+    policies = {
+        p: {"count": int(c),
+            "frac": c / total,
+            "gpu_hours_lost": result.by_policy[p].lost_gpu_min / 60.0
+            if p in result.by_policy else 0.0,
+            "restart_overhead_min": result.by_policy[p].overhead_min
+            if p in result.by_policy else 0.0}
+        for p, c in sorted(result.policies.items())}
+    verdicts = {}
+    for cls_name, counter in sorted(result.verdicts.items()):
+        n = sum(counter.values()) or 1
+        verdicts[cls_name] = {v: {"count": int(c), "frac": c / n}
+                              for v, c in sorted(counter.items())}
+    hw = result.verdicts.get("hardware", {})
+    hw_total = sum(hw.values())
+    return {
+        "incidents": int(total if result.policies else 0),
+        "policies": policies,
+        "diagnosis_verdicts": verdicts,
+        "hardware_verdict_recall": (hw.get("hardware", 0) / hw_total
+                                    if hw_total else None),
+        "elastic": {"shrinks": result.elastic_shrinks,
+                    "regrows": result.elastic_regrows},
+    }
+
+
 def trace_summary(jobs: list[JobRecord], n_gpus: int,
                   horizon_min: float) -> dict:
     return {

@@ -50,6 +50,10 @@ class ReplayFailureClass:
     needs_cordon: bool = False      # run the two-round sweep + cordon a node
     restart_overhead_min: float = 10.0   # diagnose + reschedule + re-init
     repair_min: float = 0.0         # cordon duration before GPUs return
+    # Table-3 failure types (repro.core.ft.events.BY_NAME keys) whose log
+    # templates an injected incident of this class synthesizes; empty means
+    # the class has its own templates (scheduler preemption notices)
+    log_failure_types: tuple = ()
 
     def rate_for(self, jtype: str) -> float:
         """Hazard in failures per GPU-hour for one job of ``jtype``."""
@@ -66,12 +70,17 @@ DEFAULT_TAXONOMY: tuple[ReplayFailureClass, ...] = (
         jtype_mult={"evaluation": 0.1, "other": 0.2},
         needs_cordon=True,
         restart_overhead_min=30.0,      # Table 3 NVLink restart avg 95.6 min
-        repair_min=24 * 60.0),          # node drained for ~a day
+        repair_min=24 * 60.0,           # node drained for ~a day
+        log_failure_types=("NVLinkError", "CUDAError", "ECCError",
+                           "NodeFailure", "NetworkError")),
     ReplayFailureClass(
         INFRA, rate_per_gpu_hour=1.2e-4,
         jtype_mult={"evaluation": 0.3},
         needs_cordon=False,
-        restart_overhead_min=10.0),
+        restart_overhead_min=10.0,
+        # node-healthy faults: auxiliary services, remote storage — the
+        # diagnosis pipeline should call these transient/auto-recoverable
+        log_failure_types=("ConnectionError", "S3StorageError")),
     ReplayFailureClass(
         PREEMPTION, rate_per_gpu_hour=2.0e-4,
         # only best-effort (spare-pool) types can be preempted — the
@@ -80,6 +89,43 @@ DEFAULT_TAXONOMY: tuple[ReplayFailureClass, ...] = (
         needs_cordon=False,
         restart_overhead_min=2.0),
 )
+
+# scheduler-initiated eviction notices (paper §3.2 quota reclamation) — the
+# preemption class has no Table-3 root cause, so it carries its own log
+# tail. Deliberately *not* error-shaped: a preemption is an orderly
+# eviction, and its notice must not collide with the NodeFailure log
+# signature ("slurmstepd: error: ... unexpectedly rebooted") or the
+# diagnosis pipeline would cordon a healthy node.
+PREEMPTION_LOG_TEMPLATES: tuple[str, ...] = (
+    "slurmstepd: *** JOB {d} CANCELLED AT {d}:{d} DUE TO PREEMPTION ***",
+    "INFO [sched] best-effort quota reclaimed: reservation pretrain-{d} expanding",
+    "srun: Force Terminated job {d} (preempted by higher-priority reservation)",
+)
+
+
+def synthesize_failure_log(cls: ReplayFailureClass, *, seed: int = 0,
+                           n_normal: int = 24
+                           ) -> tuple[list[str], Optional[str]]:
+    """Synthesize the runtime-log snippet an injected ``cls`` incident would
+    leave behind: init banner + metric spam + a cascaded failure tail drawn
+    from the class's Table-3 template pool (``repro.core.ft.events``).
+
+    Returns ``(lines, truth)`` where ``truth`` is the ground-truth Table-3
+    failure name (``None`` for scheduler preemptions, which have no Table-3
+    root cause). The replay engine feeds these through the §6.1 diagnosis
+    pipeline and lets the verdict pick the recovery policy.
+    """
+    from repro.core.ft.events import BY_NAME, fill_template, generate_log
+    rng = random.Random(seed ^ 0xFA11)
+    if cls.log_failure_types:
+        weights = [BY_NAME[n].num for n in cls.log_failure_types]
+        truth = rng.choices(cls.log_failure_types, weights=weights, k=1)[0]
+        return (generate_log(BY_NAME[truth], seed=rng.randrange(2 ** 30),
+                             n_normal=n_normal), truth)
+    lines = generate_log(None, seed=rng.randrange(2 ** 30), n_normal=n_normal)
+    for t in PREEMPTION_LOG_TEMPLATES:
+        lines.append(fill_template(t, rng))
+    return lines, None
 
 BY_CLASS = {c.name: c for c in DEFAULT_TAXONOMY}
 

@@ -1,51 +1,79 @@
-"""Failure-aware, event-driven cluster trace replay (paper §3.2 + §5).
+"""Failure-aware, event-driven cluster trace replay (paper §3.2 + §5 + §6).
 
-This is the first subsystem that exercises *scheduling* and *fault
-tolerance* in one scenario: it replays a ``workload.generate_jobs``
-population through the ``ReservationScheduler`` while injecting the §5
-interruption taxonomy (``repro.cluster.failures``) into running jobs —
-reproducing the paper's joint characterization of queuing delay (Fig. 6),
-restart counts and lost GPU hours (Figs. 13-14, Table 2/3 analogues).
+This is the subsystem that exercises *scheduling* and *fault tolerance* in
+one scenario: it replays a ``workload.generate_jobs`` population through the
+``ReservationScheduler`` while injecting the §5 interruption taxonomy
+(``repro.cluster.failures``) into running jobs — reproducing the paper's
+joint characterization of queuing delay (Fig. 6), restart counts and lost
+GPU hours (Figs. 13-14, Table 2/3 analogues) — and, when diagnosis is
+enabled, closes the §6.1 loop: every injected failure synthesizes a log
+snippet, runs it through the ``core/ft`` pipeline (LogCompressor →
+RuleBasedDiagnoser → Failure Agent), and the verdict picks the recovery
+policy.
 
 Mechanics
 ---------
-A single event heap drives the simulation. Event kinds:
+Dynamic events live in a lazy-deletion heap; the initial 1M-job submission
+stream is consumed through a sorted *arrival cursor* instead (an arrival is
+known ahead of time, so paying O(log n) heap traffic for it is pure waste —
+switching the cold stream to a cursor is what brought the full 1M-job Seren
+replay from ~30 s under 15 s). Event kinds:
 
   ``FINISH``  a running job completes and frees its GPUs;
-  ``ARRIVE``  a job is submitted (or *re*-submitted after a failure);
-  ``FAIL``    an injected interruption kills a running job;
-  ``REPAIR``  a cordoned node returns to the schedulable pool.
+  ``ARRIVE``  a job is *re*-submitted after a failure (initial submissions
+              come from the arrival cursor);
+  ``FAIL``    an injected interruption hits a running job;
+  ``REPAIR``  a cordoned node returns — to the schedulable pool, or straight
+              back to the elastic job that lent it.
+
+``FINISH``/``FAIL`` payloads carry the job's *epoch*; elastic resizes bump
+the epoch, so a stale end-event popped later is simply discarded
+(lazy deletion) instead of paying O(n) heap surgery.
 
 Waiting jobs live in two ``deque``-backed FIFO classes (reservation-priority
-and best-effort), so dispatch is O(1) per started job instead of the
-O(queue) list ``pop(0)`` rescans the old ``simulate_queue`` paid — that
-change alone is what lets a ~1M-job synthetic trace replay in seconds.
-``simulate_queue`` is now a thin wrapper over this engine with injection
-disabled, so the two paths can never drift.
+and best-effort), so dispatch is O(1) per started job.
 
 Failure handling per injected event (class ``hardware``/``infra``/
 ``preemption``):
 
-  1. the job's GPUs are freed and its progress rolls back to the last
-     periodic checkpoint (``CheckpointManager``-style accounting: work since
-     the last multiple of ``checkpoint_interval_min`` is *lost GPU time*;
-     non-checkpointed types restart from zero);
-  2. ``hardware`` failures mark a fleet node faulty and run the §6.1
-     ``two_round_detection`` sweep; detected nodes are cordoned and their
-     GPUs leave the pool until a ``REPAIR`` event ``repair_min`` later;
-  3. the job re-queues at the *back* of its priority class (a restart is a
-     resubmission) with its remaining work plus the class's restart
-     overhead, up to ``max_restarts`` attempts — beyond that the job is
-     killed, mirroring the paper's jobs that exhaust automatic recovery.
+  1. the job's progress rolls back to the last periodic checkpoint
+     (``CheckpointManager``-style accounting: work since the last multiple
+     of ``checkpoint_interval_min`` is *lost GPU time*; non-checkpointed
+     types restart from zero);
+  2. with ``diagnose=True`` the incident's synthesized log
+     (``failures.synthesize_failure_log``) is pushed through the §6.1
+     ``FailureDiagnosisSystem`` and the verdict
+     (``core.ft.diagnosis.verdict_class``) picks the recovery policy:
+
+       hardware   -> cordon + requeue, or **elastic shrink** when
+                     ``elastic=True``: the failed node's GPUs leave with the
+                     cordon, the job continues on its surviving nodes with
+                     the remaining runtime stretched proportionally, and the
+                     width is restored at the node's ``REPAIR`` event;
+       transient  -> in-place restart: the job keeps its allocation, pays
+                     the restart overhead, resumes from the checkpoint;
+       user       -> requeue (someone must fix the script and resubmit);
+
+     preemptions are scheduler-initiated, so they always requeue (their
+     verdict is still recorded). Without diagnosis the behavior is the
+     original cordon(+)requeue driven by the injected class alone.
+  3. node-fault cordons run the §6.1 ``two_round_detection`` sweep first;
+     cordoned GPUs return at a ``REPAIR`` event ``repair_min`` later;
+  4. a requeued job re-enters at the *back* of its priority class with its
+     remaining work, up to ``max_restarts`` attempts — beyond that the job
+     is killed, mirroring the paper's jobs that exhaust automatic recovery.
 
 Backfill
 --------
-``backfill=True`` enables a bounded-window greedy backfill: when the FIFO
-head does not fit, up to ``backfill_window`` later jobs in the same class
-may start if they fit in the *currently free* GPUs. This is deliberately
-aggressive (it can delay the head, unlike conservative/EASY backfill) and
-exists to quantify how much of the paper's eval queuing delay is pure
-head-of-line blocking; the default (off) preserves the paper's policy.
+``backfill="greedy"`` (or ``True``) enables a bounded-window greedy
+backfill: when the FIFO head does not fit, up to ``backfill_window`` later
+jobs in the same class may start if they fit in the *currently free* GPUs.
+This is deliberately aggressive — it can delay the head. ``backfill="easy"``
+is the conservative EASY variant: a later job may start only if its
+estimated completion lands before the head's *shadow time* (the earliest
+instant the head could start given the running jobs' scheduled ends), so the
+head is never delayed. The default (off) preserves the paper's plain FIFO
+policy.
 """
 from __future__ import annotations
 
@@ -53,22 +81,78 @@ import collections
 import dataclasses
 import heapq
 import math
+import operator
 import random
-from typing import Optional
+import zlib
+from typing import Optional, Union
 
 import numpy as np
 
-from repro.cluster.failures import (CHECKPOINTED_TYPES, FailureInjector,
-                                    ReplayFailureClass)
+from repro.cluster.failures import (CHECKPOINTED_TYPES, PREEMPTION,
+                                    FailureInjector, ReplayFailureClass,
+                                    synthesize_failure_log)
 from repro.cluster.scheduler import (HIGH_PRIORITY, NEVER_STARTED,
                                      ReservationScheduler)
 from repro.cluster.workload import JobRecord
 from repro.core.ft.detection import SimulatedFleet, two_round_detection
+from repro.core.ft.diagnosis import (VERDICT_HARDWARE, VERDICT_TRANSIENT,
+                                     FailureDiagnosisSystem, verdict_class)
 from repro.utils import logger
 
 # event kinds (heap tiebreak is the unique seq, so the numeric order only
 # documents intent: frees before admissions at identical timestamps)
 FINISH, ARRIVE, FAIL, REPAIR = 0, 1, 2, 3
+
+_SUBMIT_KEY = operator.attrgetter("submit_min")
+
+# recovery policies an injected failure can resolve to
+POLICY_REQUEUE, POLICY_INPLACE, POLICY_ELASTIC = \
+    "requeue", "inplace", "elastic"
+POLICY_KILLED = "killed"
+
+
+class DiagnosisLoop:
+    """Diagnosis-in-the-loop for injected failures (L4-style, §6.1).
+
+    Each incident samples one of ``n_variants`` synthetic log variants for
+    its class and runs it through the full ``FailureDiagnosisSystem``
+    (compressor → rules → vector store → agent). Verdicts are cached per
+    (class, variant), so the pipeline executes a bounded number of times no
+    matter how many failures a million-job replay injects — which mirrors
+    production reality: the paper's continuous learning turns repeat
+    incidents into cheap rule hits.
+    """
+
+    def __init__(self, system: Optional[FailureDiagnosisSystem] = None, *,
+                 n_variants: int = 32, seed: int = 0):
+        self.system = system or FailureDiagnosisSystem()
+        self.n_variants = max(1, n_variants)
+        self._rng = random.Random(seed ^ 0xD1A6)
+        self._cache: dict = {}
+        self.incidents = 0
+
+    def verdict(self, cls: ReplayFailureClass):
+        """Diagnose one injected incident of ``cls``.
+
+        Returns ``(verdict, diagnosis, truth)`` where ``verdict`` is the
+        recovery class (``hardware``/``transient``/``user``), ``diagnosis``
+        the full :class:`Diagnosis`, and ``truth`` the ground-truth Table-3
+        name the log was synthesized from (None for preemptions)."""
+        self.incidents += 1
+        variant = self._rng.randrange(self.n_variants)
+        key = (cls.name, variant)
+        hit = self._cache.get(key)
+        if hit is None:
+            seed = (zlib.crc32(cls.name.encode()) << 8) ^ variant
+            lines, truth = synthesize_failure_log(cls, seed=seed)
+            diag = self.system.diagnose(lines)
+            hit = (verdict_class(diag), diag, truth)
+            self._cache[key] = hit
+        return hit
+
+    @property
+    def pipeline_runs(self) -> int:
+        return len(self._cache)
 
 
 @dataclasses.dataclass
@@ -76,7 +160,7 @@ class ReplayConfig:
     injector: Optional[FailureInjector] = None   # None = pure queue replay
     checkpoint_interval_min: float = 30.0        # §6.1 async ckpt cadence
     checkpointed_types: tuple = CHECKPOINTED_TYPES
-    backfill: bool = False
+    backfill: Union[bool, str] = False           # False | "greedy" | "easy"
     backfill_window: int = 32
     max_restarts: int = 8
     node_gpus: int = 8                            # GPUs lost per cordon
@@ -84,6 +168,14 @@ class ReplayConfig:
     reject_impossible: bool = True                # gpus > cluster -> reject
     seed: int = 0                                 # node-pick determinism
     record_segments: bool = False                 # keep per-attempt run spans
+    # -- §6.1 diagnosis-in-the-loop recovery --------------------------------
+    diagnose: bool = False                        # run the core/ft pipeline
+    diagnosis: Optional[object] = None            # DiagnosisLoop or
+    #                                               FailureDiagnosisSystem
+    diagnosis_variants: int = 32                  # log variants per class
+    elastic: bool = False                         # allow elastic shrink
+    recovery_policy: str = "auto"                 # or force one policy:
+    #                                               requeue|inplace|elastic
 
 
 @dataclasses.dataclass
@@ -102,9 +194,21 @@ class ReplayResult:
     detection_probes: int = 0
     killed_job_ids: list = dataclasses.field(default_factory=list)
     rejected_job_ids: list = dataclasses.field(default_factory=list)
-    # with record_segments: (job_id, gpus, start_min, end_min, outcome)
-    # per execution attempt, outcome in {"finish", "fail"}
+    # with record_segments: (job_id, width, start_min, end_min, outcome)
+    # per constant-width execution span, outcome in {"finish", "fail",
+    # "resize"} — elastic width changes close one span and open the next
     segments: list = dataclasses.field(default_factory=list)
+    # -- diagnosis-driven recovery ------------------------------------------
+    policies: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)      # applied policy -> count
+    by_policy: dict = dataclasses.field(default_factory=dict)
+    verdicts: dict = dataclasses.field(default_factory=dict)
+    #   injected class -> Counter of diagnosis verdict classes
+    elastic_shrinks: int = 0
+    elastic_regrows: int = 0
+    stale_events: int = 0            # lazy-deleted end events
+    diagnosis_incidents: int = 0
+    diagnosis_pipeline_runs: int = 0
 
     # -- aggregates ---------------------------------------------------------
 
@@ -117,8 +221,9 @@ class ReplayResult:
         return sum(s.lost_gpu_min for s in self.by_class.values()) / 60.0
 
     def summary(self) -> dict:
-        """JSON-ready per-jtype queue-delay quantiles, restart counts and
-        lost-GPU-hours — the Fig. 6 / Fig. 13-14 / Table 2 analogues."""
+        """JSON-ready per-jtype queue-delay quantiles, restart counts,
+        lost-GPU-hours and recovery/diagnosis breakdowns — the Fig. 6 /
+        Fig. 13-14 / Table 2 analogues."""
         by_type: dict[str, list] = collections.defaultdict(list)
         for j in self.jobs:
             by_type[j.jtype].append(j)
@@ -160,6 +265,21 @@ class ReplayResult:
             "detection_probes": self.detection_probes,
             "killed_jobs": len(self.killed_job_ids),
             "rejected_jobs": len(self.rejected_job_ids),
+            "recovery": {
+                "policies": dict(self.policies),
+                "by_policy": {
+                    p: {"failures": s.failures,
+                        "gpu_hours": s.lost_gpu_min / 60.0,
+                        "restart_overhead_min": s.overhead_min}
+                    for p, s in sorted(self.by_policy.items())},
+                "diagnosis_verdicts": {c: dict(v) for c, v
+                                       in sorted(self.verdicts.items())},
+                "elastic": {"shrinks": self.elastic_shrinks,
+                            "regrows": self.elastic_regrows},
+                "diagnosis": {
+                    "incidents": self.diagnosis_incidents,
+                    "pipeline_runs": self.diagnosis_pipeline_runs},
+            },
         }
 
 
@@ -167,19 +287,45 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
                  reserved_frac: float = 0.85,
                  config: Optional[ReplayConfig] = None) -> ReplayResult:
     """Replay ``jobs`` through the reservation scheduler, optionally with
-    failure injection. Mutates each job's ``queue_min`` / ``restarts`` /
-    ``lost_gpu_min`` / ``requeue_wait_min`` in place and returns the
-    aggregate :class:`ReplayResult`."""
+    failure injection and diagnosis-driven recovery. Mutates each job's
+    ``queue_min`` / ``restarts`` / ``lost_gpu_min`` / ``requeue_wait_min``
+    in place and returns the aggregate :class:`ReplayResult`."""
     cfg = config or ReplayConfig()
     sched = ReservationScheduler(total_gpus, reserved_frac)
     injector = cfg.injector
     ckpt_types = frozenset(cfg.checkpointed_types)
+    interval = cfg.checkpoint_interval_min
     result = ReplayResult(jobs=jobs)
     rng = random.Random(cfg.seed ^ 0xC0FFEE)
 
     n_nodes = max(total_gpus // cfg.node_gpus, 1)
     fleet = SimulatedFleet(n_nodes)
     max_cordoned = int(n_nodes * cfg.max_cordon_frac)
+
+    if cfg.recovery_policy not in ("auto", POLICY_REQUEUE, POLICY_INPLACE,
+                                   POLICY_ELASTIC):
+        raise ValueError(f"unknown recovery_policy {cfg.recovery_policy!r}")
+    diagnosis: Optional[DiagnosisLoop] = None
+    diag_incidents0 = diag_runs0 = 0
+    if injector is not None and (cfg.diagnose or cfg.diagnosis is not None):
+        d = cfg.diagnosis
+        if isinstance(d, DiagnosisLoop):
+            # a shared loop keeps its verdict cache warm across replays;
+            # snapshot its counters so this result reports per-run deltas
+            diagnosis = d
+            diag_incidents0 = d.incidents
+            diag_runs0 = d.pipeline_runs
+        else:
+            diagnosis = DiagnosisLoop(d, n_variants=cfg.diagnosis_variants,
+                                      seed=cfg.seed)
+
+    backfill_policy = None
+    if cfg.backfill:
+        backfill_policy = "greedy" if cfg.backfill is True else cfg.backfill
+        if backfill_policy not in ("greedy", "easy"):
+            raise ValueError(f"unknown backfill policy {cfg.backfill!r}")
+    greedy = backfill_policy == "greedy"
+    easy = backfill_policy == "easy"
 
     # reset per-run state so the same job list can be replayed repeatedly
     # (e.g. with and without injection for an apples-to-apples comparison)
@@ -190,165 +336,422 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
         j.lost_gpu_min = 0.0
         j._done = 0.0
         j._started = False
+        j._running = False
+        j._width = j.gpus
+        j._epoch = 0
+        j._prog = 0.0
+        j._seg_start = 0.0
 
-    # event heap: (time, seq, kind, payload) — seq is globally unique, so
-    # the heap order is a strict total order (deterministic replay)
-    events: list = [(j.submit_min, i, ARRIVE, j)
-                    for i, j in enumerate(jobs)]
-    heapq.heapify(events)
+    # initial submissions are consumed through a cursor over the
+    # time-sorted trace (stable sort == the old (submit, index) heap order,
+    # so replays stay bit-exact); only *dynamic* events — finishes, failures,
+    # requeues, repairs — pay for the heap, which therefore stays small
+    # (O(running jobs), not O(trace)).
+    arrivals = sorted(jobs, key=_SUBMIT_KEY)
+    events: list = []
     seq = len(jobs)
 
     wait_hi: collections.deque = collections.deque()
     wait_lo: collections.deque = collections.deque()
     hi_types = HIGH_PRIORITY
+    # (scheduled_end, job, epoch) for EASY shadow estimation; lazily pruned
+    running_ends: list = []
+
+    heappush = heapq.heappush
+    heappop = heapq.heappop
+    can_start = sched.can_start
+    sched_start = sched.start
+    draw = injector.draw if injector is not None else None
 
     # per-job transient state lives on the record (like sched's ``_alloc``):
     #   _arrived_at  time of the current (re)submission
-    #   _done        checkpointed progress (minutes of completed work)
-    #   _run_start   wall time the current attempt started
+    #   _done        checkpointed progress (nominal minutes of work)
+    #   _prog        nominal progress as of _seg_start
+    #   _seg_start   wall time the current constant-width segment started
+    #                (may sit in the future during restart re-init)
+    #   _width       current width; < gpus while elastically shrunken
+    #   _epoch       bumped on every resize/restart to void in-flight events
+    # Progress is accounted in *nominal* minutes: a job at width w advances
+    # w/gpus nominal minutes per wall minute, so executed GPU-time for p
+    # nominal minutes is p*gpus regardless of the width trajectory.
 
     def start(job: JobRecord, now: float) -> None:
         nonlocal seq
-        sched.start(job)
+        sched_start(job)
+        job._running = True
+        job._width = w = job.gpus
         wait = now - job._arrived_at
-        if not job._started:
+        if job._started:
+            job.requeue_wait_min += wait
+        else:
             job._started = True
             job.queue_min = wait        # the paper's queuing delay (Fig. 6)
-        else:
-            job.requeue_wait_min += wait
+        job._prog = job._done
+        job._seg_start = now
+        job._epoch = ep = job._epoch + 1
         remaining = job.duration_min - job._done
-        job._run_start = now
-        hit = injector.draw(job.jtype, job.gpus, remaining) \
-            if injector is not None else None
+        hit = draw(job.jtype, w, remaining) if draw is not None else None
         if hit is None:
-            heapq.heappush(events, (now + remaining, seq, FINISH, job))
+            end = now + remaining
+            heappush(events, (end, seq, FINISH, (job, ep)))
         else:
-            ttf, cls = hit
-            heapq.heappush(events, (now + ttf, seq, FAIL, (job, cls)))
+            end = now + hit[0]
+            heappush(events, (end, seq, FAIL, (job, ep, hit[1])))
         seq += 1
+        if easy:
+            running_ends.append((end, job, ep))
+
+    def schedule_end(job: JobRecord) -> None:
+        """(Re)schedule the job's end event from ``_seg_start`` at the
+        current width, with the remaining runtime stretched proportionally
+        and a fresh (memoryless) failure draw."""
+        nonlocal seq
+        job._epoch = ep = job._epoch + 1
+        w = job._width
+        remaining = (job.duration_min - job._prog) * job.gpus / w
+        hit = draw(job.jtype, w, remaining) if draw is not None else None
+        t0 = job._seg_start
+        if hit is None:
+            end = t0 + remaining
+            heappush(events, (end, seq, FINISH, (job, ep)))
+        else:
+            end = t0 + hit[0]
+            heappush(events, (end, seq, FAIL, (job, ep, hit[1])))
+        seq += 1
+        if easy:
+            running_ends.append((end, job, ep))
+
+    def sweep():
+        """Hide the faulty node in the fleet, then locate it with the §6.1
+        two-round allgather sweep."""
+        candidates = [n for n in fleet.healthy_nodes()
+                      if n not in fleet.faulty]
+        if candidates:
+            fleet.fail({rng.choice(candidates)})
+        det = two_round_detection(fleet.healthy_nodes(), fleet)
+        result.detection_probes += det.probes
+        return det
+
+    def bump_policy(policy: str, cstats: ClassStats, lost_gpu: float,
+                    overhead: float) -> None:
+        cstats.overhead_min += overhead
+        result.policies[policy] += 1
+        p = result.by_policy.setdefault(policy, ClassStats())
+        p.failures += 1
+        p.lost_gpu_min += lost_gpu
+        p.overhead_min += overhead
+
+    def _fits(job: JobRecord, free_r: int, free_s: int) -> bool:
+        """can_start against a hypothetical (reserved, spare) free split."""
+        if job.jtype in hi_types:
+            return job.gpus <= free_r + free_s
+        if job.gpus <= sched.spare:
+            return job.gpus <= free_s
+        return job.gpus <= free_r + free_s
+
+    def shadow_start(head: JobRecord) -> float:
+        """EASY reservation: the earliest time ``head`` could start given
+        the running jobs' scheduled ends (an estimate — future failures and
+        repairs are unknowable, exactly as in a real EASY scheduler)."""
+        live = [(t, j, ep) for t, j, ep in running_ends
+                if j._running and ep == j._epoch]
+        running_ends[:] = live                  # prune lazy-deleted entries
+        live.sort(key=lambda e: e[0])
+        free_r, free_s = sched.free_reserved, sched.free_spare
+        for t, j, _ in live:
+            _, r, s = j._alloc
+            free_r += r
+            free_s += s
+            if _fits(head, free_r, free_s):
+                return t
+        return math.inf
 
     def backfill_scan(q: collections.deque, now: float) -> None:
         """Head is blocked: start any of the next ``backfill_window`` jobs
-        that fit right now (greedy — may delay the head; see module doc)."""
+        that fit right now. Greedy may delay the head; EASY additionally
+        requires the candidate's estimated completion to land before the
+        head's shadow time, so the head's start is protected."""
+        if easy:
+            shadow = shadow_start(q[0])
+            if not math.isfinite(shadow):
+                return
         i = 1
         limit = min(len(q), cfg.backfill_window)
         while i < limit:
             j = q[i]
-            if sched.can_start(j):
+            if can_start(j) and (not easy or
+                                 now + (j.duration_min - j._done)
+                                 <= shadow + 1e-9):
                 del q[i]
                 start(j, now)
                 limit -= 1
             else:
                 i += 1
 
-    def try_start(now: float) -> None:
-        for q in (wait_hi, wait_lo):
-            while q:
-                j = q[0]
-                if sched.can_start(j):
-                    q.popleft()
-                    start(j, now)
-                else:
-                    # FIFO head-of-line: later jobs can't jump the queue
-                    # (this is exactly the paper's eval-delay mechanism)
-                    break
-            if cfg.backfill and q:
-                backfill_scan(q, now)
+    # try_start runs after every capacity-freeing event, which makes the
+    # blocked-head probe the single hottest check of a million-job replay —
+    # so the pool test is inlined here (keep in sync with
+    # ReservationScheduler.can_start) instead of paying a method call per
+    # probe. FIFO head-of-line: later jobs can't jump the queue (this is
+    # exactly the paper's eval-delay mechanism); backfill, when enabled,
+    # relaxes that under its policy's constraint.
+    spare = sched.spare
 
-    def on_fail(job: JobRecord, cls: ReplayFailureClass, now: float) -> None:
+    def try_start(now: float) -> None:
+        free_r = sched.free_reserved
+        free_s = sched.free_spare
+        while wait_hi:
+            j = wait_hi[0]
+            if j.gpus > free_r + free_s:      # hi class draws both pools
+                break
+            wait_hi.popleft()
+            start(j, now)
+            free_r = sched.free_reserved
+            free_s = sched.free_spare
+        while wait_lo:
+            j = wait_lo[0]
+            g = j.gpus
+            if (g > free_s) if g <= spare else (g > free_r + free_s):
+                break                          # lo class: spare pool only,
+            wait_lo.popleft()                  # unless wider than the pool
+            start(j, now)
+            free_r = sched.free_reserved
+            free_s = sched.free_spare
+        if backfill_policy is not None:
+            if wait_hi:
+                backfill_scan(wait_hi, now)
+            if wait_lo:
+                backfill_scan(wait_lo, now)
+
+    def on_arrive(job: JobRecord, now: float) -> None:
+        if job.gpus > total_gpus:
+            if cfg.reject_impossible:
+                logger.warning(
+                    "job %d (%s) demands %d GPUs on a %d-GPU cluster; "
+                    "rejected (never started)", job.job_id, job.jtype,
+                    job.gpus, total_gpus)
+                job.queue_min = NEVER_STARTED
+                result.rejected_job_ids.append(job.job_id)
+                return
+            # legacy mode: an impossible job wedges its FIFO class and
+            # everything behind it surfaces as never-started at drain
+        job._arrived_at = now
+        q = wait_hi if job.jtype in hi_types else wait_lo
+        # Dispatch invariant: between events, every non-empty wait queue has
+        # a blocked head (try_start runs to quiescence after each
+        # capacity-freeing event). An ARRIVE changes no free capacity, so it
+        # can enable at most *itself* — when its queue is empty, or when a
+        # backfill policy admits it past the blocked head (greedy: it merely
+        # fits; EASY: its completion must also land before the head's
+        # shadow time, so the head is never delayed).
+        if not q:
+            if can_start(job):
+                start(job, now)
+                return
+        elif len(q) < cfg.backfill_window and can_start(job) and (
+                greedy or (easy and now + (job.duration_min - job._done)
+                           <= shadow_start(q[0]) + 1e-9)):
+            start(job, now)
+            return
+        q.append(job)
+
+    def on_fail(job: JobRecord, cls: ReplayFailureClass, now: float) -> bool:
+        """Handle one injected failure; returns True iff pool capacity was
+        freed (so the caller knows whether a dispatch pass is needed)."""
         nonlocal seq
-        sched.finish(job)
-        if cfg.record_segments:
+        # -- fold the failed segment & roll back to the last checkpoint ----
+        w = job._width
+        progress = job._prog + max(0.0, now - job._seg_start) * w / job.gpus
+        if cfg.record_segments and now > job._seg_start:
             result.segments.append(
-                (job.job_id, job.gpus, job._run_start, now, "fail"))
-        stats = result.by_class.setdefault(cls.name, ClassStats())
-        stats.failures += 1
-        progress = job._done + (now - job._run_start)
-        if job.jtype in ckpt_types and cfg.checkpoint_interval_min > 0:
-            rollback = (math.floor(progress / cfg.checkpoint_interval_min)
-                        * cfg.checkpoint_interval_min)
+                (job.job_id, w, job._seg_start, now, "fail"))
+        if job.jtype in ckpt_types and interval > 0:
+            rollback = math.floor(progress / interval) * interval
         else:
             rollback = 0.0
-        lost = progress - rollback
-        job.lost_gpu_min += lost * job.gpus
-        stats.lost_gpu_min += lost * job.gpus
-        stats.overhead_min += cls.restart_overhead_min
+        lost_gpu = (progress - rollback) * job.gpus
+        job.lost_gpu_min += lost_gpu
         job._done = rollback
         job.restarts += 1
+        cstats = result.by_class.setdefault(cls.name, ClassStats())
+        cstats.failures += 1
+        cstats.lost_gpu_min += lost_gpu
+        # restart overhead is charged where the policy lands (bump_policy):
+        # a failure that kills the job restarts nothing, so by_class and
+        # by_policy overhead totals must reconcile
 
-        if cls.needs_cordon and len(fleet.cordoned) < max_cordoned:
-            # the faulty node is hidden in the fleet; locate it with the
-            # §6.1 two-round allgather sweep, then cordon what it finds
-            candidates = [n for n in fleet.healthy_nodes()
-                          if n not in fleet.faulty]
-            if candidates:
-                fleet.fail({rng.choice(candidates)})
-            det = two_round_detection(fleet.healthy_nodes(), fleet)
-            result.detection_probes += det.probes
+        # -- diagnosis-in-the-loop: verdict picks the recovery policy ------
+        if diagnosis is not None:
+            vclass, _, _ = diagnosis.verdict(cls)
+            result.verdicts.setdefault(
+                cls.name, collections.Counter())[vclass] += 1
+        else:
+            vclass = None
+
+        if cfg.recovery_policy != "auto":
+            policy = cfg.recovery_policy
+        elif vclass is None or cls.name == PREEMPTION:
+            # classic class-driven recovery; preemption is additionally
+            # scheduler-initiated — the quota wants the GPUs back, so the
+            # job must requeue no matter what its log looks like
+            policy = POLICY_REQUEUE
+        elif vclass == VERDICT_HARDWARE and cfg.elastic:
+            policy = POLICY_ELASTIC
+        elif vclass == VERDICT_TRANSIENT:
+            policy = POLICY_INPLACE
+        else:
+            policy = POLICY_REQUEUE
+        node_fault = cls.name != PREEMPTION and (
+            vclass == VERDICT_HARDWARE if vclass is not None
+            else cls.needs_cordon)
+        over_budget = job.restarts > cfg.max_restarts
+
+        # -- elastic shrink: drop the failed node, keep running ------------
+        swept = False
+        released = False
+        if policy == POLICY_ELASTIC and not over_budget \
+                and len(fleet.cordoned) < max_cordoned:
+            det = sweep()
+            swept = True
+            k = cfg.node_gpus * len(det.faulty)
+            if det.faulty and k < w:
+                fleet.cordon(det.faulty)
+                for n in det.faulty:
+                    fleet.faulty.discard(n)
+                take_r, take_s = sched.release_partial(job, k)
+                job._width = w - k
+                result.cordon_events += len(det.faulty)
+                result.elastic_shrinks += 1
+                bump_policy(POLICY_ELASTIC, cstats, lost_gpu,
+                            cls.restart_overhead_min)
+                heappush(events, (now + max(cls.repair_min, 1e-9), seq,
+                                  REPAIR, (det.faulty, take_r, take_s, job)))
+                seq += 1
+                # resume from the checkpoint on the surviving nodes once
+                # re-init is paid; the remaining runtime stretches by
+                # gpus/width (progress is nominal-minute denominated)
+                job._prog = rollback
+                job._seg_start = now + cls.restart_overhead_min
+                schedule_end(job)
+                return False
+            if det.faulty:
+                # node located, but the job is too narrow to shed it: free
+                # the job first so the pool cordon can absorb its GPUs,
+                # then fall through to the requeue path
+                sched.finish(job)
+                job._running = False
+                released = True
+                fleet.cordon(det.faulty)
+                for n in det.faulty:
+                    fleet.faulty.discard(n)
+                take_r, take_s = sched.cordon(k)
+                result.cordon_events += len(det.faulty)
+                heappush(events, (now + max(cls.repair_min, 1e-9), seq,
+                                  REPAIR, (det.faulty, take_r, take_s, None)))
+                seq += 1
+            policy = POLICY_REQUEUE
+
+        # -- in-place restart: keep the allocation, pay the overhead -------
+        if policy == POLICY_INPLACE and not over_budget:
+            bump_policy(POLICY_INPLACE, cstats, lost_gpu,
+                        cls.restart_overhead_min)
+            job._prog = rollback
+            job._seg_start = now + cls.restart_overhead_min
+            schedule_end(job)
+            return False
+
+        # -- requeue (and the kill path for every policy) ------------------
+        if not released:
+            sched.finish(job)
+            job._running = False
+        if node_fault and not swept and len(fleet.cordoned) < max_cordoned:
+            det = sweep()
             if det.faulty:
                 fleet.cordon(det.faulty)
                 for n in det.faulty:
                     fleet.faulty.discard(n)
                 take_r, take_s = sched.cordon(cfg.node_gpus * len(det.faulty))
                 result.cordon_events += len(det.faulty)
-                heapq.heappush(events, (now + max(cls.repair_min, 1e-9), seq,
-                                        REPAIR, (det.faulty, take_r, take_s)))
+                heappush(events, (now + max(cls.repair_min, 1e-9), seq,
+                                  REPAIR, (det.faulty, take_r, take_s, None)))
                 seq += 1
-
-        if job.restarts > cfg.max_restarts:
+        if over_budget:
             result.killed_job_ids.append(job.job_id)
-            return
-        heapq.heappush(events, (now + cls.restart_overhead_min, seq,
-                                ARRIVE, job))
+            bump_policy(POLICY_KILLED, cstats, lost_gpu, 0.0)
+            return True
+        bump_policy(POLICY_REQUEUE, cstats, lost_gpu,
+                    cls.restart_overhead_min)
+        heappush(events, (now + cls.restart_overhead_min, seq, ARRIVE, job))
         seq += 1
+        return True
+
+    def on_repair(payload, now: float) -> None:
+        nodes, take_r, take_s, lender = payload
+        fleet.repair(nodes)
+        if lender is not None and lender._running \
+                and lender._width < lender.gpus:
+            # the node's GPUs go straight back to the elastic job that lent
+            # them; any excess (the job already regrew) rejoins the pools
+            give = min(lender.gpus - lender._width, take_r + take_s)
+            give_r = min(give, take_r)
+            give_s = give - give_r
+            sched.reacquire(lender, give_r, give_s)
+            sched.uncordon(take_r - give_r, take_s - give_s)
+            if now > lender._seg_start:
+                if cfg.record_segments:
+                    result.segments.append(
+                        (lender.job_id, lender._width, lender._seg_start,
+                         now, "resize"))
+                lender._prog += (now - lender._seg_start) \
+                    * lender._width / lender.gpus
+                lender._seg_start = now
+            lender._width += give
+            result.elastic_regrows += 1
+            schedule_end(lender)
+        else:
+            sched.uncordon(take_r, take_s)
 
     processed = 0
-    heappop = heapq.heappop
-    can_start = sched.can_start
-    backfill_on = cfg.backfill
-    backfill_window = cfg.backfill_window
-    # Dispatch invariant: between events, every non-empty wait queue has a
-    # blocked head (try_start runs to quiescence after each capacity-freeing
-    # event). An ARRIVE changes no free capacity, so it can enable at most
-    # *itself* — when its queue is empty (or, under backfill, when it lands
-    # inside the scan window). That turns half of all events into O(1)
-    # appends and is the main reason million-job replays stay in seconds.
-    while events:
-        now, _, kind, payload = heappop(events)
-        processed += 1
-        if kind == ARRIVE:
-            job = payload
-            if job.gpus > total_gpus:
-                if cfg.reject_impossible:
-                    logger.warning(
-                        "job %d (%s) demands %d GPUs on a %d-GPU cluster; "
-                        "rejected (never started)", job.job_id, job.jtype,
-                        job.gpus, total_gpus)
-                    job.queue_min = NEVER_STARTED
-                    result.rejected_job_ids.append(job.job_id)
-                    continue
-                # legacy mode: an impossible job wedges its FIFO class and
-                # everything behind it surfaces as never-started at drain
-            job._arrived_at = now
-            q = wait_hi if job.jtype in hi_types else wait_lo
-            if (not q or (backfill_on and len(q) < backfill_window)) \
-                    and can_start(job):
-                start(job, now)
-            else:
-                q.append(job)
+    ai, n_arr = 0, len(arrivals)
+    while True:
+        # initial submissions win exact-time ties against dynamic events,
+        # matching the old all-in-one-heap sequence numbering
+        if ai < n_arr and (not events
+                           or arrivals[ai].submit_min <= events[0][0]):
+            job = arrivals[ai]
+            ai += 1
+            processed += 1
+            on_arrive(job, job.submit_min)
             continue
+        if not events:
+            break
+        now, _, kind, payload = heappop(events)
         if kind == FINISH:
-            sched.finish(payload)
+            job, epoch = payload
+            if epoch != job._epoch:
+                result.stale_events += 1
+                continue
+            processed += 1
+            sched.finish(job)
+            job._running = False
             if cfg.record_segments:
                 result.segments.append(
-                    (payload.job_id, payload.gpus, payload._run_start, now,
-                     "finish"))
+                    (job.job_id, job._width, job._seg_start, now, "finish"))
         elif kind == FAIL:
-            on_fail(payload[0], payload[1], now)
+            job, epoch, cls = payload
+            if epoch != job._epoch:
+                result.stale_events += 1
+                continue
+            processed += 1
+            if not on_fail(job, cls, now):
+                continue                      # no pool capacity changed
+        elif kind == ARRIVE:
+            processed += 1
+            on_arrive(payload, now)
+            continue
         else:  # REPAIR
-            nodes, take_r, take_s = payload
-            fleet.repair(nodes)
-            sched.uncordon(take_r, take_s)
+            processed += 1
+            on_repair(payload, now)
         try_start(now)
 
     # jobs still waiting when the event stream drains never ran: give them
@@ -358,4 +761,8 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
             if not j._started:
                 j.queue_min = NEVER_STARTED
     result.events_processed = processed
+    if diagnosis is not None:
+        result.diagnosis_incidents = diagnosis.incidents - diag_incidents0
+        result.diagnosis_pipeline_runs = \
+            diagnosis.pipeline_runs - diag_runs0
     return result

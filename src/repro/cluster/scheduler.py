@@ -75,9 +75,12 @@ class ReservationScheduler:
         first. Returns the (reserved, spare) split actually taken, which
         must be handed back verbatim to :meth:`uncordon`. If fewer than
         ``gpus`` are free (the node's GPUs were partly re-allocated before
-        the cordon landed), only the free portion is removed."""
-        take_r = min(gpus, self.free_reserved)
-        take_s = min(gpus - take_r, self.free_spare)
+        the cordon landed), only the free portion is removed. The takes are
+        clamped at zero so a cordon landing on an empty (or transiently
+        inconsistent) pool is an exact no-op instead of silently *adding*
+        capacity — repeated cordon/uncordon cycles must round-trip."""
+        take_r = max(0, min(gpus, self.free_reserved))
+        take_s = max(0, min(gpus - take_r, self.free_spare))
         self.free_reserved -= take_r
         self.free_spare -= take_s
         return take_r, take_s
@@ -86,6 +89,28 @@ class ReservationScheduler:
         """Return GPUs removed by :meth:`cordon` (node repaired)."""
         self.free_reserved += take_r
         self.free_spare += take_s
+
+    # -- elastic resize (diagnosis-driven recovery, repro.cluster.replay) ---
+
+    def release_partial(self, job: JobRecord, gpus: int) -> tuple[int, int]:
+        """Detach ``gpus`` GPUs from ``job``'s live allocation *without*
+        returning them to the free pools — they leave the cluster with the
+        job's cordoned node. Returns the (reserved, spare) split detached;
+        hand it to :meth:`uncordon` at repair time (or :meth:`reacquire` to
+        grow the job back). Spare-pool GPUs are shed first so the
+        pretraining reservation recovers its quota at the repair."""
+        kind, alloc_r, alloc_s = job._alloc              # type: ignore
+        take_s = min(gpus, alloc_s)
+        take_r = min(gpus - take_s, alloc_r)
+        job._alloc = (kind, alloc_r - take_r, alloc_s - take_s)  # type: ignore
+        return take_r, take_s
+
+    def reacquire(self, job: JobRecord, take_r: int, take_s: int) -> None:
+        """Grow ``job``'s live allocation by GPUs that come straight off a
+        repaired node (the inverse of :meth:`release_partial`); the free
+        pools are bypassed because the GPUs were never free."""
+        kind, alloc_r, alloc_s = job._alloc              # type: ignore
+        job._alloc = (kind, alloc_r + take_r, alloc_s + take_s)  # type: ignore
 
 
 def simulate_queue(jobs: list[JobRecord], total_gpus: int, *,

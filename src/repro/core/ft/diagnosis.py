@@ -156,6 +156,26 @@ class RuleBasedDiagnoser:
         return None
 
 
+# -- recovery-policy taxonomy (consumed by repro.cluster.replay) ------------
+#
+# The replay engine collapses a fine-grained Diagnosis onto three recovery
+# verdicts: a node is at fault (cordon it, or shrink the job elastically off
+# it), the fault is transient (restart in place from the last checkpoint
+# without giving up the allocation), or a human must fix something (the job
+# is resubmitted).
+VERDICT_HARDWARE, VERDICT_TRANSIENT, VERDICT_USER = \
+    "hardware", "transient", "user"
+
+
+def verdict_class(diag: Diagnosis) -> str:
+    """Map a :class:`Diagnosis` onto the replay recovery taxonomy."""
+    if diag.needs_node_cordon:
+        return VERDICT_HARDWARE
+    if diag.auto_recoverable and diag.failure != "Unknown":
+        return VERDICT_TRANSIENT
+    return VERDICT_USER
+
+
 DEFAULT_SEED_RULES: list[tuple[str, str]] = [
     ("OutOfMemoryError", r"OutOfMemoryError|RESOURCE_EXHAUSTED"),
     ("FileNotFoundError", r"FileNotFoundError"),

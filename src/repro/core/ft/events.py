@@ -151,6 +151,19 @@ TABLE3: tuple[FailureType, ...] = (
 
 BY_NAME: dict[str, FailureType] = {f.name: f for f in TABLE3}
 
+# the Table-3 types whose root cause lives in a node (GPU/NVLink/ECC/...):
+# these are what the replay engine's ``hardware`` interruption class
+# synthesizes logs from, and what must come back ``needs_node_cordon`` for
+# the diagnosis-in-the-loop recovery to pick the cordon/elastic policies
+CORDON_TYPES: tuple[str, ...] = tuple(
+    f.name for f in TABLE3 if f.needs_node_cordon)
+
+
+def types_in_category(category: str) -> tuple[FailureType, ...]:
+    """All Table-3 failure types of one paper category
+    (Infrastructure/Framework/Script)."""
+    return tuple(f for f in TABLE3 if f.category == category)
+
 _WORDS = ("config", "scheduler", "tokenizer", "embedding", "optimizer",
           "sampler", "rotary", "partition", "gateway", "collector")
 
@@ -171,13 +184,17 @@ _INIT_LINES = (
 )
 
 
-def _fill(template: str, rng: random.Random) -> str:
+def fill_template(template: str, rng: random.Random) -> str:
+    """Randomize a log template's ``{d}``/``{w}`` slots."""
     out = template
     while "{d}" in out:
         out = out.replace("{d}", str(rng.randint(0, 4096)), 1)
     while "{w}" in out:
         out = out.replace("{w}", rng.choice(_WORDS), 1)
     return out
+
+
+_fill = fill_template
 
 
 def generate_log(failure: Optional[FailureType], *, seed: int = 0,

@@ -179,8 +179,9 @@ def given(*args: SearchStrategy, **kwargs: SearchStrategy):
                 except Exception:
                     shown = {k: v for k, v in drawn.items()
                              if not isinstance(v, DataObject)}
-                    print(f"\nFalsifying example ({fn.__qualname__}, "
-                          f"example {i}): {shown}", file=sys.stderr)
+                    sys.stderr.write(f"\nFalsifying example "
+                                     f"({fn.__qualname__}, example {i}): "
+                                     f"{shown}\n")
                     raise
 
         wrapper.__name__ = fn.__name__

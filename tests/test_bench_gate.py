@@ -1,0 +1,89 @@
+"""CI perf-regression gate (benchmarks.check_regression): pass/fail logic
+over benchmark artifact JSON, tolerance handling, and missing-file rules."""
+import json
+import os
+
+import pytest
+
+from benchmarks.check_regression import DEFAULT_TOLERANCE, GATES, check, main
+
+
+def _write(dirp, bench, metrics):
+    os.makedirs(dirp, exist_ok=True)
+    rows = [{"bench": bench, "metric": m, "value": v,
+             "target": "", "unit": "", "ok": None}
+            for m, v in metrics.items()]
+    with open(os.path.join(dirp, f"{bench}.json"), "w") as f:
+        json.dump(rows, f)
+
+
+def _write_all(dirp, scale=1.0):
+    _write(dirp, "replay", {"events_per_calib": 0.8 * scale,
+                            "events_per_sec": 150e3 * scale})
+    _write(dirp, "detection", {"n128_probe_savings": 120.0 * scale,
+                               "n512_probe_savings": 490.0 * scale})
+    _write(dirp, "checkpoint", {"7B-analog_stall_reduction": 10.0 * scale,
+                                "123B-analog_stall_reduction": 19.0 * scale})
+
+
+def test_gate_passes_within_tolerance(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write_all(str(base))
+    _write_all(str(fresh), scale=0.80)      # -20% < the 25% tolerance
+    assert check(str(fresh), str(base)) == []
+    assert main(["--fresh", str(fresh), "--baseline", str(base)]) == 0
+
+
+def test_gate_fails_on_throughput_regression(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write_all(str(base))
+    _write_all(str(fresh), scale=0.40)      # -60%: beyond every tolerance
+    failures = check(str(fresh), str(base))
+    gated = {f"{b}.{m}" for b, ms in GATES.items() for m, _, _ in ms}
+    assert len(failures) == len(gated)
+    assert main(["--fresh", str(fresh), "--baseline", str(base)]) == 1
+
+
+def test_checkpoint_has_wider_noise_band(tmp_path):
+    """The stall-reduction ratio is noisy by construction; a -30% drop
+    fails replay/detection but stays inside checkpoint's 50% band."""
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write_all(str(base))
+    _write_all(str(fresh), scale=0.70)
+    failures = check(str(fresh), str(base))
+    assert failures and not any("checkpoint" in f for f in failures)
+    _write_all(str(fresh), scale=0.45)      # -55%: outside even 50%
+    assert any("checkpoint" in f for f in check(str(fresh), str(base)))
+
+
+def test_gate_single_metric_regression_is_reported(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write_all(str(base))
+    _write_all(str(fresh))
+    _write(str(fresh), "replay", {"events_per_calib": 0.5,
+                                  "events_per_sec": 150e3})  # -37.5%
+    failures = check(str(fresh), str(base))
+    assert len(failures) == 1
+    assert "replay.events_per_calib" in failures[0]
+
+
+def test_missing_baseline_is_skipped_missing_fresh_fails(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write_all(str(fresh))
+    # no baseline at all: nothing to compare, gate passes (new benches
+    # must not fail retroactively)
+    assert check(str(fresh), str(base)) == []
+    # a fresh artifact missing is a hard failure: the bench should have
+    # produced it
+    _write_all(str(base))
+    os.remove(os.path.join(str(fresh), "replay.json"))
+    failures = check(str(fresh), str(base))
+    assert any("replay" in f and "missing" in f for f in failures)
+
+
+def test_tolerance_is_configurable(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write_all(str(base))
+    _write_all(str(fresh), scale=0.70)
+    assert check(str(fresh), str(base), tolerance=0.5) == []
+    assert DEFAULT_TOLERANCE == pytest.approx(0.25)

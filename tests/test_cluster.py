@@ -1,11 +1,14 @@
 """Trace generator + scheduler: the §3 characterization claims hold on the
-synthetic Acme trace, and the queue simulation conserves resources."""
+synthetic Acme trace, the queue simulation conserves resources, and the
+cordon/elastic accounting round-trips exactly."""
+import random
+
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.cluster import (KALOS, SEREN, generate_jobs, simulate_queue,
-                           trace_summary)
+from repro.cluster import (KALOS, SEREN, ReservationScheduler, generate_jobs,
+                           simulate_queue, trace_summary)
 from repro.cluster.workload import JobRecord
 
 HORIZON = 6 * 30 * 24 * 60.0
@@ -67,6 +70,86 @@ def test_seren_pretrain_share():
     s = trace_summary(jobs, SEREN.n_gpus, HORIZON)["type_shares"]
     assert s["pretrain"]["gputime_frac"] > 0.6
     assert s["evaluation"]["gputime_frac"] < 0.05
+
+
+# --- cordon / elastic accounting ---------------------------------------------
+
+def test_cordon_uncordon_with_zero_free_gpus_is_noop():
+    """Regression: cordoning a fully-allocated cluster must take nothing
+    and the round-trip must leave the pool accounting untouched — repeated
+    cycles included."""
+    sched = ReservationScheduler(64, 0.75)
+    hog = JobRecord(0, "pretrain", 64, 0.0, 10.0, "completed")
+    assert sched.can_start(hog)
+    sched.start(hog)
+    assert (sched.free_reserved, sched.free_spare) == (0, 0)
+    for _ in range(50):
+        take = sched.cordon(8)
+        assert take == (0, 0)
+        sched.uncordon(*take)
+        assert (sched.free_reserved, sched.free_spare) == (0, 0)
+        assert sched.free_reserved >= 0 and sched.free_spare >= 0
+    sched.finish(hog)
+    assert (sched.free_reserved, sched.free_spare) == (48, 16)
+
+
+@settings(max_examples=25, deadline=None)
+@given(gpus=st.integers(8, 96), frac=st.floats(0.0, 1.0),
+       seed=st.integers(0, 1000))
+def test_repeated_cordon_cycles_conserve_accounting(gpus, frac, seed):
+    """Random interleavings of job start/finish and cordon/uncordon: free
+    counts never go negative and every cordon hands back exactly what it
+    took, so the final state equals the initial one."""
+    rng = random.Random(seed)
+    sched = ReservationScheduler(gpus, frac)
+    init = (sched.free_reserved, sched.free_spare)
+    running, cordons = [], []
+    for step in range(200):
+        op = rng.randrange(4)
+        if op == 0:
+            j = JobRecord(step, rng.choice(["pretrain", "evaluation"]),
+                          rng.randint(1, gpus), 0.0, 1.0, "completed")
+            if sched.can_start(j):
+                sched.start(j)
+                running.append(j)
+        elif op == 1 and running:
+            sched.finish(running.pop(rng.randrange(len(running))))
+        elif op == 2:
+            cordons.append(sched.cordon(rng.randint(1, gpus)))
+        elif op == 3 and cordons:
+            sched.uncordon(*cordons.pop(rng.randrange(len(cordons))))
+        assert sched.free_reserved >= 0, "reserved pool went negative"
+        assert sched.free_spare >= 0, "spare pool went negative"
+        allocated = sum(r + s for _, r, s in (j._alloc for j in running))
+        outstanding = sum(r + s for r, s in cordons)
+        assert sched.free_reserved + sched.free_spare \
+            + allocated + outstanding == gpus
+    for j in running:
+        sched.finish(j)
+    for take in cordons:
+        sched.uncordon(*take)
+    assert (sched.free_reserved, sched.free_spare) == init
+
+
+def test_release_partial_and_reacquire_round_trip():
+    """Elastic shrink accounting: partial release detaches GPUs from the
+    job without freeing them; reacquire restores the allocation so finish
+    frees exactly the original amount."""
+    sched = ReservationScheduler(32, 0.5)
+    job = JobRecord(0, "pretrain", 24, 0.0, 10.0, "completed")
+    sched.start(job)
+    free0 = (sched.free_reserved, sched.free_spare)
+    take = sched.release_partial(job, 8)
+    assert sum(take) == 8
+    # the pools saw nothing: the GPUs left with the cordoned node
+    assert (sched.free_reserved, sched.free_spare) == free0
+    kind, r, s = job._alloc
+    assert r + s == 16
+    sched.reacquire(job, *take)
+    _, r, s = job._alloc
+    assert r + s == 24
+    sched.finish(job)
+    assert (sched.free_reserved, sched.free_spare) == (16, 16)
 
 
 # --- scheduler invariants ----------------------------------------------------

@@ -1,6 +1,8 @@
 """Failure-aware trace replay: exact parity with simulate_queue, capacity
 conservation under injected failures, rollback accounting, the two-round
-cordon path, backfill, and the never-started sentinel."""
+cordon path, diagnosis-driven recovery (elastic shrink / in-place restart),
+greedy vs EASY backfill, and the never-started sentinel."""
+import collections
 import math
 
 import numpy as np
@@ -9,7 +11,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.cluster import (DEFAULT_TAXONOMY, KALOS, NEVER_STARTED,
                            FailureInjector, ReplayConfig, ReplayFailureClass,
-                           generate_jobs, replay_trace, simulate_queue)
+                           generate_jobs, recovery_stats, replay_trace,
+                           simulate_queue, synthesize_failure_log)
 from repro.cluster.failures import HARDWARE, INFRA, PREEMPTION
 from repro.cluster.workload import JobRecord
 
@@ -218,6 +221,272 @@ def test_backfill_never_worse_for_eval_and_conserves():
     bf_eval = np.median([j.queue_min for j in jobs
                          if j.jtype == "evaluation"])
     assert bf_eval <= fifo_eval
+    assert all(j.started for j in jobs)
+
+
+# --- diagnosis-driven recovery -----------------------------------------------
+
+def _assert_work_identity(jobs, res):
+    """Executed GPU-minutes (from the run segments) must equal useful work
+    plus rolled-back (lost) work for every job, under any recovery policy:
+    elastic width changes redistribute work over time but never create or
+    destroy it."""
+    executed = collections.defaultdict(float)
+    for jid, w, t0, t1, _ in res.segments:
+        executed[jid] += w * (t1 - t0)
+    finished = {s[0] for s in res.segments if s[4] == "finish"}
+    for j in jobs:
+        useful = j.gpus * (j.duration_min if j.job_id in finished
+                           else j._done)
+        assert executed[j.job_id] == pytest.approx(
+            useful + j.lost_gpu_min, rel=1e-6, abs=1e-5)
+
+
+def test_synthesized_logs_match_their_class():
+    """failures.synthesize_failure_log draws hardware logs from cordon-type
+    templates and labels them with the ground truth."""
+    from repro.core.ft.events import BY_NAME, CORDON_TYPES
+    hw = next(c for c in DEFAULT_TAXONOMY if c.name == HARDWARE)
+    pre = next(c for c in DEFAULT_TAXONOMY if c.name == PREEMPTION)
+    for seed in range(10):
+        lines, truth = synthesize_failure_log(hw, seed=seed)
+        assert truth in CORDON_TYPES and BY_NAME[truth].needs_node_cordon
+        assert any("ERROR" in l for l in lines)
+    lines, truth = synthesize_failure_log(pre, seed=0)
+    assert truth is None
+    assert any("PREEMPTION" in l for l in lines)
+
+
+def test_diagnosis_verdicts_reported_with_hardware_recall():
+    """Acceptance: per-failure-class verdicts appear in summary() and >=95%
+    of synthesized hardware logs are classified hardware by core/ft."""
+    jobs = generate_jobs(KALOS, seed=0, n_jobs=20_000)
+    res = replay_trace(jobs, KALOS.n_gpus, reserved_frac=0.97,
+                       config=ReplayConfig(
+                           injector=FailureInjector(seed=1, rate_scale=4.0),
+                           diagnose=True, elastic=True))
+    rec = res.summary()["recovery"]
+    hw = rec["diagnosis_verdicts"].get("hardware", {})
+    assert sum(hw.values()) > 0
+    assert hw.get("hardware", 0) / sum(hw.values()) >= 0.95
+    # transient infra verdicts restarted in place, hardware ones shrank
+    assert rec["policies"].get("inplace", 0) > 0
+    assert res.elastic_shrinks > 0
+    # the variant cache bounds pipeline cost no matter the incident count
+    assert 0 < res.diagnosis_pipeline_runs <= 3 * 32
+    assert res.diagnosis_incidents == sum(
+        sum(v.values()) for v in res.verdicts.values())
+    stats = recovery_stats(res)
+    assert stats["hardware_verdict_recall"] >= 0.95
+    # preemptions must requeue no matter what the diagnosis says
+    assert rec["policies"].get("inplace", 0) + rec["policies"].get(
+        "elastic", 0) + rec["policies"].get("requeue", 0) \
+        + rec["policies"].get("killed", 0) == sum(rec["policies"].values())
+
+
+def test_elastic_shrink_stretches_then_repair_regrows():
+    """A 16-GPU job losing one 8-GPU node at t=50 rolls back to the t=30
+    checkpoint, continues at width 8 (stretched 2x), and regrows to 16 when
+    the node is repaired — all hand-checkable timestamps."""
+    cls = ReplayFailureClass(HARDWARE, 1.0, {}, needs_cordon=True,
+                             restart_overhead_min=5.0, repair_min=40.0)
+    job = JobRecord(0, "pretrain", 16, 0.0, 60.0, "completed")
+    inj = ScriptedInjector([(50.0, cls), None, None])
+    res = replay_trace([job], 32, reserved_frac=0.5,
+                       config=ReplayConfig(injector=inj, node_gpus=8,
+                                           recovery_policy="elastic",
+                                           max_cordon_frac=0.5,
+                                           checkpoint_interval_min=30.0,
+                                           record_segments=True))
+    assert res.elastic_shrinks == 1 and res.elastic_regrows == 1
+    assert res.cordon_events == 1 and res.detection_probes > 0
+    assert job.restarts == 1
+    assert job.lost_gpu_min == pytest.approx(20.0 * 16)   # 50 -> ckpt 30
+    # run 0..50 at 16; resume at 55 width 8 (prog 30); repair at 90 folds
+    # (90-55)*8/16 = 17.5 nominal -> prog 47.5, width 16 again; finish at
+    # 90 + (60-47.5) = 102.5
+    (f0, f1, f2) = res.segments
+    assert f0 == (0, 16, 0.0, 50.0, "fail")
+    assert f1[:2] == (0, 8) and f1[2] == pytest.approx(55.0) \
+        and f1[3] == pytest.approx(90.0) and f1[4] == "resize"
+    assert f2[:2] == (0, 16) and f2[3] == pytest.approx(102.5) \
+        and f2[4] == "finish"
+    assert res.stale_events == 1          # the voided width-8 end event
+    _assert_work_identity([job], res)
+
+
+def test_elastic_too_narrow_falls_back_to_cordon_requeue():
+    """A job no wider than one node cannot shed it: the node is still
+    cordoned (from the pool) and the job requeues."""
+    cls = ReplayFailureClass(HARDWARE, 1.0, {}, needs_cordon=True,
+                             restart_overhead_min=5.0, repair_min=500.0)
+    job = JobRecord(0, "pretrain", 8, 0.0, 40.0, "completed")
+    inj = ScriptedInjector([(10.0, cls), None])
+    res = replay_trace([job], 32, reserved_frac=0.5,
+                       config=ReplayConfig(injector=inj, node_gpus=8,
+                                           recovery_policy="elastic",
+                                           max_cordon_frac=0.5,
+                                           record_segments=True))
+    assert res.elastic_shrinks == 0
+    assert res.cordon_events == 1                  # fallback still cordons
+    assert res.policies["requeue"] == 1
+    assert any(s[4] == "finish" for s in res.segments)
+    _assert_work_identity([job], res)
+
+
+def test_inplace_restart_keeps_allocation():
+    """A transient failure restarts in place: the allocation is never
+    released, so a same-size job arriving during the restart overhead must
+    wait for the *full* run, not the overhead window."""
+    infra = next(c for c in DEFAULT_TAXONOMY if c.name == INFRA)
+    a = JobRecord(0, "pretrain", 8, 0.0, 100.0, "completed")
+    b = JobRecord(1, "pretrain", 8, 55.0, 10.0, "completed")
+    inj = ScriptedInjector([(50.0, infra), None, None])
+    res = replay_trace([a, b], 8, reserved_frac=1.0,
+                       config=ReplayConfig(injector=inj,
+                                           recovery_policy="inplace",
+                                           checkpoint_interval_min=30.0,
+                                           record_segments=True))
+    assert res.policies["inplace"] == 1
+    # a: fail at 50 (ckpt 30), resume 50+10 overhead, remaining 70 -> 130
+    a_end = max(s[3] for s in res.segments if s[0] == 0)
+    assert a_end == pytest.approx(130.0)
+    assert a.lost_gpu_min == pytest.approx(20.0 * 8)
+    # b arrived at 55 while a held the cluster through its restart
+    assert b.queue_min == pytest.approx(130.0 - 55.0)
+    _assert_work_identity([a, b], res)
+
+
+@pytest.mark.parametrize("policy", ["requeue", "inplace", "elastic"])
+def test_total_work_invariant_across_recovery_policies(policy):
+    """Same failure point in all three worlds: completed + lost GPU-time is
+    policy-invariant (policies move work in time, never in amount)."""
+    cls = ReplayFailureClass(HARDWARE, 1.0, {}, needs_cordon=True,
+                             restart_overhead_min=7.0, repair_min=200.0)
+    job = JobRecord(0, "pretrain", 16, 0.0, 100.0, "completed")
+    inj = ScriptedInjector([(50.0, cls), None, None])
+    res = replay_trace([job], 32, reserved_frac=0.5,
+                       config=ReplayConfig(injector=inj, node_gpus=8,
+                                           max_cordon_frac=0.5,
+                                           recovery_policy=policy,
+                                           checkpoint_interval_min=30.0,
+                                           record_segments=True))
+    executed = sum(w * (t1 - t0) for _, w, t0, t1, _ in res.segments)
+    assert job.lost_gpu_min == pytest.approx(20.0 * 16)
+    assert executed == pytest.approx(100.0 * 16 + job.lost_gpu_min)
+    assert any(s[4] == "finish" for s in res.segments)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(20, 120), gpus=st.integers(8, 48),
+       seed=st.integers(0, 50), rate=st.floats(0.0, 0.5))
+def test_elastic_replay_conserves_capacity_and_work(n, gpus, seed, rate):
+    """For ANY small trace and failure rate under the elastic policy: GPU
+    usage never exceeds the cluster at any event timestamp, and executed
+    GPU-time equals useful + lost work for every job."""
+    rng = np.random.default_rng(seed)
+    jobs = _random_jobs(rng, n, gpus)
+    inj = FailureInjector(seed=seed, rate_scale=rate * 5e3)
+    res = replay_trace(jobs, gpus, reserved_frac=0.6,
+                       config=ReplayConfig(injector=inj, node_gpus=4,
+                                           recovery_policy="elastic",
+                                           record_segments=True, seed=seed))
+    _assert_capacity_conserved(res.segments, gpus)
+    _assert_work_identity(jobs, res)
+    for j in jobs:
+        assert j.queue_min >= 0 and j.requeue_wait_min >= 0
+        assert j.lost_gpu_min >= 0
+
+
+# --- EASY vs greedy backfill -------------------------------------------------
+
+def _backfill_trace():
+    return [JobRecord(0, "evaluation", 4, 0.0, 10.0, "completed"),
+            JobRecord(1, "evaluation", 2, 0.0, 5.0, "completed"),
+            JobRecord(2, "evaluation", 8, 1.0, 5.0, "completed"),   # head
+            JobRecord(3, "evaluation", 4, 2.0, 20.0, "completed"),
+            JobRecord(4, "evaluation", 2, 2.0, 3.0, "completed")]
+
+
+def test_easy_backfill_never_delays_head_greedy_does():
+    """On a crafted trace the greedy policy backfills a long job in front
+    of the blocked head (delaying it 10 -> 22), while EASY only admits the
+    short job whose completion lands before the head's shadow time."""
+    jobs = _backfill_trace()
+    replay_trace(jobs, 10, reserved_frac=0.0, config=ReplayConfig())
+    assert jobs[2].queue_min == pytest.approx(9.0)       # FIFO head start
+
+    replay_trace(jobs, 10, reserved_frac=0.0,
+                 config=ReplayConfig(backfill="greedy"))
+    assert jobs[2].queue_min == pytest.approx(21.0)      # head delayed
+    assert jobs[3].queue_min == pytest.approx(0.0)       # long job jumped
+
+    replay_trace(jobs, 10, reserved_frac=0.0,
+                 config=ReplayConfig(backfill="easy"))
+    assert jobs[2].queue_min == pytest.approx(9.0)       # head protected
+    assert jobs[4].queue_min == pytest.approx(0.0)       # short: on arrival
+    assert jobs[3].queue_min == pytest.approx(13.0)      # long one waited
+
+
+def test_easy_admits_fitting_arrival_immediately():
+    """An EASY candidate whose completion lands before the head's shadow
+    must start at *arrival*, not wait for the next capacity event."""
+    a = JobRecord(0, "evaluation", 8, 0.0, 100.0, "completed")
+    h = JobRecord(1, "evaluation", 4, 1.0, 5.0, "completed")    # blocked
+    c = JobRecord(2, "evaluation", 2, 2.0, 5.0, "completed")
+    replay_trace([a, h, c], 10, reserved_frac=0.0,
+                 config=ReplayConfig(backfill="easy"))
+    assert c.queue_min == pytest.approx(0.0)     # ends t=7 << shadow t=100
+    assert h.queue_min == pytest.approx(99.0)    # head start unharmed
+
+
+def test_shared_diagnosis_loop_reports_per_run_deltas():
+    """Reusing one DiagnosisLoop across replays keeps the verdict cache
+    warm, but each result must report its own run's incident counts."""
+    from repro.cluster import DiagnosisLoop
+    loop = DiagnosisLoop()
+    jobs = generate_jobs(KALOS, seed=0, n_jobs=5000)
+    results = [replay_trace(jobs, KALOS.n_gpus, reserved_frac=0.97,
+                            config=ReplayConfig(
+                                injector=FailureInjector(seed=1,
+                                                         rate_scale=4.0),
+                                diagnosis=loop))
+               for _ in range(2)]
+    for r in results:
+        assert r.diagnosis_incidents == sum(
+            sum(v.values()) for v in r.verdicts.values())
+    assert loop.incidents == sum(r.diagnosis_incidents for r in results)
+    assert results[1].diagnosis_pipeline_runs <= \
+        results[0].diagnosis_pipeline_runs   # cache stayed warm
+
+
+def test_killed_job_charges_no_restart_overhead():
+    """A failure that kills the job restarts nothing: by_class and
+    by_policy overhead totals must reconcile exactly."""
+    infra = next(c for c in DEFAULT_TAXONOMY if c.name == INFRA)
+    job = JobRecord(0, "debug", 1, 0.0, 50.0, "completed")
+    inj = ScriptedInjector([(10.0, infra)] * 3)
+    res = replay_trace([job], 8,
+                       config=ReplayConfig(injector=inj, max_restarts=2))
+    # two requeues paid overhead; the third (killing) failure did not
+    assert res.by_class[INFRA].overhead_min == \
+        pytest.approx(2 * infra.restart_overhead_min)
+    assert sum(s.overhead_min for s in res.by_class.values()) == \
+        pytest.approx(sum(s.overhead_min for s in res.by_policy.values()))
+
+
+def test_easy_backfill_conserves_and_helps_eval():
+    jobs = generate_jobs(KALOS, seed=2, n_jobs=8000)
+    simulate_queue(jobs, KALOS.n_gpus, reserved_frac=0.97)
+    fifo_eval = np.median([j.queue_min for j in jobs
+                           if j.jtype == "evaluation"])
+    res = replay_trace(jobs, KALOS.n_gpus, reserved_frac=0.97,
+                       config=ReplayConfig(backfill="easy",
+                                           record_segments=True))
+    _assert_capacity_conserved(res.segments, KALOS.n_gpus)
+    easy_eval = np.median([j.queue_min for j in jobs
+                           if j.jtype == "evaluation"])
+    assert easy_eval <= fifo_eval
     assert all(j.started for j in jobs)
 
 
