@@ -6,7 +6,7 @@ from 1 to 8 concurrent trials per node and stabilizes 8..256.
 """
 from __future__ import annotations
 
-from benchmarks.common import Row, emit
+from benchmarks.common import Row, calibrated_probe, emit
 from repro.core.evalsched import (ClusterSpec, schedule_baseline,
                                   schedule_decoupled, standard_suite)
 from repro.core.evalsched.coordinator import loading_speed_curve
@@ -32,6 +32,17 @@ def run(fast: bool = False) -> list[Row]:
                 d.gpu_utilization, "GPU idle eliminated (Fig.13)", "",
                 d.gpu_utilization > 0.9),
         ]
+    # calibrated decoupled-scheduler throughput for the CI regression gate:
+    # repeated full decoupled schedules, engine task completions per
+    # calibrated op (methodology in benchmarks.common.calibrated_probe)
+    probe_spec = ClusterSpec(n_nodes=4)
+    rows.append(Row("evalsched", "events_per_calib",
+                    calibrated_probe(
+                        lambda: float(sum(
+                            schedule_decoupled(suite, probe_spec).n_events
+                            for _ in range(50))),
+                        rounds=4),
+                    "CI regression gate (calibrated)", ""))
     curve = dict(loading_speed_curve(ClusterSpec(n_nodes=4),
                                      [1, 2, 4, 8, 64, 256]))
     rows += [

@@ -1,0 +1,141 @@
+"""Elastic capacity pool: free-pool regrowth + evalsched GPU borrowing.
+
+The pool unifies the paper's two §6 systems over one free-GPU ledger
+(``repro.cluster.replay``): shrunken elastic jobs (§6.1) reclaim width from
+the free pool at any capacity event instead of waiting ~a day for their
+lender node's repair, and decomposed §6.2 eval trials lease the idle
+fragments in between, preempted back the moment the cluster wants the GPUs.
+This bench characterizes both sides at Seren scale (fast mode: Kalos 20k):
+
+  * regrowth — with the pool ON, essentially every elastic shrink regrows
+    (vs the repair-only world where most shrunken jobs *finish* before the
+    node returns); reported as regrow events per shrink in both worlds;
+  * borrowing — borrowed GPU-hours, lease/preemption counts and the share
+    of otherwise-idle free capacity the trials soak up;
+  * head-delay tail — the EASY shadow-estimate error figure: a conservative
+    EASY scheduler promises the head a start time computed from running
+    jobs' scheduled ends, but injected failures/repairs/regrowths it cannot
+    foresee move the realized start; the p50/p95/p99 error is the paper's
+    "how wrong is the estimate at scale" characterization;
+  * throughput — a fixed interleaved-calibration probe over the EASY +
+    borrower + elastic configuration yields ``events_per_calib``, gated by
+    ``benchmarks.check_regression`` alongside the replay/evalsched gates.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Row, calibrated_probe, emit
+from repro.cluster import (KALOS, SEREN, FailureInjector, ReplayConfig,
+                           generate_jobs, replay_trace)
+from repro.core.evalsched import TrialBorrower
+
+N_JOBS_FULL = 200_000            # Seren slice: saturated spare pool
+N_JOBS_FAST = 20_000
+N_JOBS_PROBE = 50_000            # fixed CI-gate throughput probe
+
+
+def _config(*, regrow: bool = True, borrower=None, backfill=False
+            ) -> ReplayConfig:
+    return ReplayConfig(injector=FailureInjector(seed=1, rate_scale=2.0),
+                        diagnose=True, elastic=True,
+                        opportunistic_regrow=regrow,
+                        borrower=borrower, backfill=backfill)
+
+
+def run(fast: bool = False) -> list[Row]:
+    spec = KALOS if fast else SEREN
+    n_jobs = N_JOBS_FAST if fast else N_JOBS_FULL
+    frac = 0.97 if fast else 0.95
+    jobs = generate_jobs(spec, seed=0, n_jobs=n_jobs)
+
+    # 1) repair-only world (PR-2 semantics): width returns only at REPAIR
+    off = replay_trace(jobs, spec.n_gpus, reserved_frac=frac,
+                       config=_config(regrow=False))
+    off_shrinks = max(off.elastic_shrinks, 1)
+    off_ratio = off.elastic_regrows / off_shrinks
+
+    # 2) pool world: opportunistic regrowth + trial borrowing
+    borrower = TrialBorrower.from_suite(63, repeat=100 if fast else 500)
+    t0 = time.perf_counter()
+    on = replay_trace(jobs, spec.n_gpus, reserved_frac=frac,
+                      config=_config(borrower=borrower))
+    wall = time.perf_counter() - t0
+    pool = on.summary()["pool"]
+    on_shrinks = max(on.elastic_shrinks, 1)
+    on_ratio = (pool["regrowth"]["pool_regrows"]
+                + pool["regrowth"]["repair_regrows"]) / on_shrinks
+    borrow = pool["borrow"]
+
+    # 3) EASY world: head-delay tail + shadow-estimate error (the figure)
+    easy = replay_trace(jobs, spec.n_gpus, reserved_frac=frac,
+                        config=_config(backfill="easy"))
+    hd = easy.summary()["head_delay"]
+    err = hd["shadow_error"]
+
+    # 4) fixed-shape calibrated throughput probe (EASY + borrower + elastic:
+    #    the most machinery the engine can run at once); methodology in
+    #    benchmarks.common.calibrated_probe, shared with the replay gate
+    probe_jobs = generate_jobs(KALOS, seed=0, n_jobs=N_JOBS_PROBE)
+    events_per_calib = calibrated_probe(
+        lambda: replay_trace(
+            probe_jobs, KALOS.n_gpus, reserved_frac=0.97,
+            config=_config(borrower=TrialBorrower.from_suite(63, repeat=50),
+                           backfill="easy")).events_processed)
+
+    return [
+        Row("pool", "n_jobs", float(n_jobs), "", "", None),
+        Row("pool", "replay_wall_s", wall, "", "s"),
+        Row("pool", "events_per_calib", events_per_calib,
+            "CI regression gate (calibrated)", ""),
+        # -- regrowth: pool vs repair-only ----------------------------------
+        Row("pool", "elastic_shrinks", float(on.elastic_shrinks),
+            "hardware-verdict wide jobs shrank", "",
+            on.elastic_shrinks > 0),
+        Row("pool", "pool_regrows", float(pool["regrowth"]["pool_regrows"]),
+            "width reclaimed from the free pool", "",
+            pool["regrowth"]["pool_regrows"] > 0),
+        Row("pool", "regrows_per_shrink", on_ratio,
+            "~every shrink regrows with the pool", "",
+            # a 20k fast trace is mostly idle — shrunken jobs often finish
+            # before any capacity event lands; assert at full scale
+            None if fast else on_ratio >= 0.5),
+        Row("pool", "regrows_per_shrink_repair_only", off_ratio,
+            "repair-only world: most jobs finish shrunken", "",
+            on_ratio > off_ratio),
+        Row("pool", "pool_regrown_gpus",
+            float(pool["regrowth"]["pool_regrown_gpus"]), "", ""),
+        # -- borrowing ------------------------------------------------------
+        Row("pool", "borrowed_gpu_hours", borrow["borrowed_gpu_hours"],
+            "trials ran on leased free-pool GPUs", "GPUh",
+            borrow["borrowed_gpu_hours"] > 0),
+        Row("pool", "borrow_leases", float(borrow["leases"]), "", ""),
+        Row("pool", "borrow_preemptions", float(borrow["preemptions"]),
+            "revoked by dispatch/regrowth", ""),
+        Row("pool", "borrow_shards_completed",
+            float(borrow["shards_completed"]), "", "",
+            borrow["shards_completed"] > 0),
+        Row("pool", "borrow_restart_overhead_min",
+            borrow["restart_overhead_min"],
+            "decomposed-trial restart cost", "min"),
+        # -- EASY head-delay tail (shadow-estimate error figure) ------------
+        Row("pool", "easy_head_delay_p50_min", hd["p50_min"], "", "min",
+            hd["n"] > 0),
+        Row("pool", "easy_head_delay_p95_min", hd["p95_min"], "", "min"),
+        Row("pool", "easy_head_delay_p99_min", hd["p99_min"],
+            "blocked-head wait tail under EASY", "min"),
+        Row("pool", "easy_shadow_error_p50_min", err["p50_min"],
+            "EASY estimate is mostly exact", "min",
+            abs(err["p50_min"]) < 1.0),
+        Row("pool", "easy_shadow_error_p99_min", err["p99_min"],
+            "tail = unforeseen failures/repairs", "min", err["n"] > 0),
+    ]
+
+
+def main(fast: bool = False) -> None:
+    emit(run(fast), "pool")
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast="--fast" in sys.argv)

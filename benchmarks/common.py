@@ -2,12 +2,13 @@
 from __future__ import annotations
 
 import dataclasses
+import gc
 import heapq
 import json
 import os
 import random
 import time
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 ARTIFACTS = os.environ.get("REPRO_BENCH_DIR", "artifacts/bench")
 
@@ -30,6 +31,30 @@ def calibration_chunk(n: int = 300_000) -> tuple[int, float]:
         if len(h) > 512:
             heappop(h)
     return n, time.perf_counter() - t0
+
+
+def calibrated_probe(workload: Callable[[], float], rounds: int = 4) -> float:
+    """The CI-gate measurement methodology, shared by every
+    ``events_per_calib`` metric: run ``workload`` (returns its event/op
+    count) ``rounds`` times interleaved with calibration chunks, GC paused
+    across the window, and ratio the *windowed* rates — workload events/s
+    over same-window calibration ops/s — so runner class and bursty CPU
+    contention cancel. Keep all gated benches on this one helper: gates are
+    only comparable if their sensitivity to noise is identical."""
+    c_ops = c_sec = w_ev = w_sec = 0.0
+    gc.collect()
+    gc.disable()
+    try:
+        for _ in range(rounds):
+            ops, sec = calibration_chunk()
+            c_ops += ops
+            c_sec += sec
+            t0 = time.perf_counter()
+            w_ev += workload()
+            w_sec += time.perf_counter() - t0
+    finally:
+        gc.enable()
+    return (w_ev / max(w_sec, 1e-9)) / (c_ops / max(c_sec, 1e-9))
 
 
 @dataclasses.dataclass

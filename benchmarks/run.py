@@ -9,13 +9,15 @@ import time
 import traceback
 
 from benchmarks import (bench_checkpoint, bench_detection, bench_diagnosis,
-                        bench_evalsched, bench_moe_comm, bench_recovery,
-                        bench_replay, bench_roofline, bench_trace)
+                        bench_evalsched, bench_moe_comm, bench_pool,
+                        bench_recovery, bench_replay, bench_roofline,
+                        bench_trace)
 from benchmarks.common import emit
 
 BENCHES = {
     "trace": bench_trace,              # §3, Fig. 2/3/4/6/17
     "replay": bench_replay,            # §3.2+§5 failure-aware replay
+    "pool": bench_pool,                # §6.1x§6.2 elastic capacity pool
     "checkpoint": bench_checkpoint,    # §6.1 async ckpt 3.6~58.7x
     "diagnosis": bench_diagnosis,      # §6.1 Fig. 15, Table 3, ~90%
     "detection": bench_detection,      # §6.1 two-round sweep

@@ -6,8 +6,13 @@ Part 2 — a *real* threaded mini-evaluation (actual JAX inference, throttled
 remote weight loading, subprocess-style metric jobs) shows the same effect
 in wall-clock time on this machine.
 
-  PYTHONPATH=src python examples/decoupled_eval.py
+  PYTHONPATH=src python examples/decoupled_eval.py [--fast]
+
+``--fast`` (used by the CI examples-smoke job) shrinks the threaded part to
+a tiny model and suite so the walkthrough finishes in seconds.
 """
+import argparse
+
 import jax
 
 from repro.config import get_smoke
@@ -19,6 +24,11 @@ from repro.models import Model
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small-scale knobs for CI smoke runs")
+    args = ap.parse_args()
+
     print("=== simulated 63-dataset / 7B evaluation (paper Fig. 16) ===")
     suite = standard_suite(63)
     for nodes in (1, 4):
@@ -31,11 +41,21 @@ def main() -> None:
               f"speedup {b.makespan / d.makespan:.2f}x")
 
     print("\n=== real threaded mini-evaluation on this machine ===")
-    cfg = get_smoke("internlm-7b")
+    if args.fast:
+        from repro.config import AttentionConfig, ModelConfig
+        cfg = ModelConfig(
+            name="smoke", num_layers=2, d_model=64, d_ff=128, vocab_size=256,
+            max_seq_len=64, vocab_pad_multiple=64,
+            attention=AttentionConfig(num_heads=4, num_kv_heads=2,
+                                      head_dim=16))
+        n_datasets, bandwidth = 6, 16.0
+    else:
+        cfg = get_smoke("internlm-7b")
+        n_datasets, bandwidth = 10, 4.0
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    store = RemoteStore(params, bandwidth_mbps=4.0)
-    mini = make_suite(model, n_datasets=10, heavy_tail=0.6)
+    store = RemoteStore(params, bandwidth_mbps=bandwidth)
+    mini = make_suite(model, n_datasets=n_datasets, heavy_tail=0.6)
     try:
         base = run_baseline(model, store, mini, n_workers=2,
                             warm_params=params)

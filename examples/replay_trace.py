@@ -23,10 +23,17 @@ that exercises scheduling and fault tolerance in one scenario:
      paper's Figs. 13-14 / Table 2 analogues);
   5. optionally flip on a backfill policy to see how much of the eval
      delay is pure head-of-line blocking: ``--backfill greedy`` may delay
-     the queue head, ``--backfill easy`` (conservative) never does.
+     the queue head, ``--backfill easy`` (conservative) never does;
+  6. with ``--borrow``, attach the elastic capacity pool's §6.2 side: a
+     ``TrialBorrower`` leases idle-fragment and shrunken-job GPUs from the
+     replay free pool for decomposed eval shards, preempted back (paying
+     the decomposed-trial restart cost) whenever dispatch or an elastic
+     job's opportunistic regrowth wants the capacity; the run then prints
+     the pool ledger — borrowed GPU-hours, lease/preemption counts,
+     regrowth events and the blocked-head delay tail.
 
   PYTHONPATH=src python examples/replay_trace.py \
-      [--jobs N] [--elastic] [--backfill {greedy,easy}]
+      [--jobs N] [--elastic] [--borrow] [--backfill {greedy,easy}]
 """
 import argparse
 import time
@@ -35,6 +42,7 @@ import numpy as np
 
 from repro.cluster import (KALOS, FailureInjector, ReplayConfig,
                            generate_jobs, recovery_stats, replay_trace)
+from repro.core.evalsched import TrialBorrower
 
 
 def _queue_medians(jobs) -> dict:
@@ -53,6 +61,9 @@ def main() -> None:
     ap.add_argument("--elastic", action="store_true",
                     help="let hardware-verdict jobs shrink elastically "
                          "instead of requeueing")
+    ap.add_argument("--borrow", action="store_true",
+                    help="lease free-pool GPUs to decomposed eval trials "
+                         "(the §6.1 x §6.2 elastic capacity pool)")
     ap.add_argument("--backfill", choices=["greedy", "easy"], default=None,
                     help="also replay with a backfill policy")
     ap.add_argument("--rate-scale", type=float, default=2.0,
@@ -72,12 +83,14 @@ def main() -> None:
         print(f"  queue median {t:12s} {m:7.2f} min")
 
     print("\n=== world 2: §5 failures + §6.1 diagnosis-in-the-loop ===")
+    borrower = (TrialBorrower.from_suite(63, repeat=20)
+                if args.borrow else None)
     t0 = time.perf_counter()
     res = replay_trace(
         jobs, KALOS.n_gpus, reserved_frac=0.97,
         config=ReplayConfig(
             injector=FailureInjector(seed=1, rate_scale=args.rate_scale),
-            diagnose=True, elastic=args.elastic))
+            diagnose=True, elastic=args.elastic, borrower=borrower))
     print(f"replayed in {time.perf_counter() - t0:.1f}s "
           f"({res.events_processed} events)")
     s = res.summary()
@@ -109,9 +122,25 @@ def main() -> None:
               f"{d['gpu_hours_lost']:9.1f} GPUh lost  "
               f"{d['restart_overhead_min']:7.0f} min overhead")
     if args.elastic:
-        e = rec["elastic"]
-        print(f"  elastic: {e['shrinks']} shrinks, {e['regrows']} regrows "
-              f"(width restored at repair)")
+        pr = s["pool"]["regrowth"]
+        print(f"  elastic: {pr['shrinks']} shrinks; regrowth "
+              f"{pr['pool_regrows']} from the free pool + "
+              f"{pr['repair_regrows']} at the lender's repair "
+              f"({pr['pool_regrown_gpus']} GPUs reclaimed early)")
+    if args.borrow:
+        b = s["pool"]["borrow"]
+        hd = s["head_delay"]
+        print("  capacity pool (free-GPU ledger):")
+        print(f"    trials borrowed {b['borrowed_gpu_hours']:.1f} GPUh over "
+              f"{b['leases']} leases ({b['preemptions']} preempted back, "
+              f"{b['restart_overhead_min']:.0f} min restart cost)")
+        print(f"    {b['shards_completed']} eval shards finished, "
+              f"{b['shards_pending']} pending at drain; "
+              f"idle-capacity share used "
+              f"{s['pool']['borrow_utilization']:.2e}")
+        print(f"    blocked-head delay p50/p95/p99 = "
+              f"{hd['p50_min']:.2f}/{hd['p95_min']:.2f}/"
+              f"{hd['p99_min']:.2f} min over {hd['n']} head episodes")
     print("  extra queueing vs clean world (requeue waits included):")
     for t, v in s["queue_delay_quantiles"].items():
         extra = [j.requeue_wait_min for j in jobs if j.jtype == t]

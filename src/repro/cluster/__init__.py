@@ -9,11 +9,13 @@ from repro.cluster.failures import (DEFAULT_TAXONOMY, FailureInjector,
                                     synthesize_failure_log)
 from repro.cluster.replay import (DiagnosisLoop, ReplayConfig, ReplayResult,
                                   replay_trace)
-from repro.cluster.analysis import recovery_stats, trace_summary
+from repro.cluster.analysis import (head_delay_stats, pool_stats,
+                                    recovery_stats, trace_summary)
 
 __all__ = ["JobRecord", "WorkloadSpec", "KALOS", "SEREN", "generate_jobs",
            "ReservationScheduler", "simulate_queue", "NEVER_STARTED",
            "FailureInjector", "ReplayFailureClass", "DEFAULT_TAXONOMY",
            "synthesize_failure_log", "DiagnosisLoop",
            "ReplayConfig", "ReplayResult", "replay_trace",
-           "recovery_stats", "trace_summary"]
+           "head_delay_stats", "pool_stats", "recovery_stats",
+           "trace_summary"]

@@ -156,6 +156,57 @@ def recovery_stats(result) -> dict:
     }
 
 
+def _tail(xs, qs=(50, 95, 99)) -> dict:
+    arr = np.asarray(xs, dtype=np.float64)
+    if arr.size == 0:
+        return {f"p{q}_min": 0.0 for q in qs} | {"n": 0, "mean_min": 0.0}
+    pcts = np.percentile(arr, qs)
+    out = {f"p{q}_min": float(v) for q, v in zip(qs, pcts)}
+    out["n"] = int(arr.size)
+    out["mean_min"] = float(arr.mean())
+    return out
+
+
+def head_delay_stats(result) -> dict:
+    """Head-delay tail (the EASY characterization figure): percentiles of
+    how long blocked FIFO heads waited before starting, and of the
+    shadow-estimate error (realized minus estimated wait — the part a real
+    EASY scheduler cannot foresee because future failures/repairs are
+    unknowable). Needs a ``replay_trace`` ReplayResult; the estimate tail
+    is sampled per ``ReplayConfig.head_delay_sample`` (every head under
+    ``backfill="easy"``)."""
+    out = _tail(result.head_delays)
+    out["shadow_error"] = _tail(result.shadow_errors)
+    return out
+
+
+def pool_stats(result) -> dict:
+    """Elastic-capacity-pool ledger stats (§6.1 x §6.2): time-integrated
+    free capacity, opportunistic regrowth activity, and — when a
+    ``TrialBorrower`` was attached — borrowed GPU-minutes, lease and
+    preemption counts. Needs a ``replay_trace`` ReplayResult."""
+    borrow = result.borrow or {}
+    borrowed = borrow.get("borrowed_gpu_min", 0.0)
+    free = result.pool_free_gpu_min
+    return {
+        "free_gpu_hours": free / 60.0,
+        "horizon_min": result.horizon_min,
+        "regrowth": {
+            # total width-restoration events: from the free pool
+            # (opportunistic) plus at the lender node's repair
+            "events": result.pool_regrows + result.elastic_regrows,
+            "pool_regrows": result.pool_regrows,
+            "pool_regrown_gpus": result.pool_regrown_gpus,
+            "repair_regrows": result.elastic_regrows,
+            "shrinks": result.elastic_shrinks,
+        },
+        "borrow": borrow,
+        "borrowed_gpu_min": borrowed,
+        # share of otherwise-idle free capacity the eval trials soaked up
+        "borrow_utilization": borrowed / free if free > 0 else 0.0,
+    }
+
+
 def trace_summary(jobs: list[JobRecord], n_gpus: int,
                   horizon_min: float) -> dict:
     return {

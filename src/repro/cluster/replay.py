@@ -74,6 +74,43 @@ estimated completion lands before the head's *shadow time* (the earliest
 instant the head could start given the running jobs' scheduled ends), so the
 head is never delayed. The default (off) preserves the paper's plain FIFO
 policy.
+
+The elastic capacity pool (free-GPU ledger)
+-------------------------------------------
+The engine keeps one *ledger* over the scheduler's free GPUs that unifies
+the two §6 systems:
+
+* **Opportunistic regrowth** (``opportunistic_regrow=True``, the default
+  with ``elastic=True``): a shrunken job no longer waits for its lender
+  node's ``REPAIR`` — at every dispatch/repair/completion event, leftover
+  free capacity is granted back to shrunken jobs (FIFO by shrink time) via
+  ``ReservationScheduler.grow``, which respects the reservation policy
+  (best-effort allocations regrow from the spare pool only). Remaining
+  runtime compresses proportionally in the nominal-minute accounting, and
+  the node's GPUs rejoin the free pools at its eventual repair. Priority
+  rule: regrowth runs strictly *after* queue dispatch, and under
+  ``backfill="easy"`` a regrow is admitted only if the regrown job's new
+  completion still lands before every waiting head's shadow time — so
+  regrowth can never delay the EASY-protected queue head (the proof is the
+  same exchange argument as EASY backfill: the granted GPUs are returned,
+  with interest, before the shadow instant).
+* **Trial borrowing** (``borrower=``, duck-typed to
+  ``repro.core.evalsched.coordinator.TrialBorrower``): decomposed §6.2 eval
+  shards lease idle-fragment and shrunken-job GPUs from the same ledger.
+  Leases are *virtual overlays* on free capacity — dispatch never sees
+  them, so borrowing cannot delay any queued job; after each capacity
+  event the engine calls ``borrower.reconcile(now, free)`` and the
+  borrower revokes leases newest-first whenever dispatch or regrowth
+  consumed the capacity out from under them, charging the preempted shard
+  its decomposed-trial restart cost. Borrowed GPU-minutes, lease and
+  preemption counts surface in ``ReplayResult.summary()["pool"]``.
+* **Head-delay characterization**: each time a job becomes a *blocked*
+  FIFO head the engine records how long it stays head before starting, and
+  (sampled every ``head_delay_sample`` heads; every head under EASY) the
+  shadow-time estimate at that instant — ``summary()["head_delay"]``
+  reports the realized p50/p95/p99 and the shadow-estimate error tail,
+  quantifying how much the EASY estimate (which cannot see future
+  failures/repairs) misses by at Seren scale.
 """
 from __future__ import annotations
 
@@ -88,6 +125,7 @@ from typing import Optional, Union
 
 import numpy as np
 
+from repro.cluster.analysis import head_delay_stats, pool_stats
 from repro.cluster.failures import (CHECKPOINTED_TYPES, PREEMPTION,
                                     FailureInjector, ReplayFailureClass,
                                     synthesize_failure_log)
@@ -176,6 +214,14 @@ class ReplayConfig:
     elastic: bool = False                         # allow elastic shrink
     recovery_policy: str = "auto"                 # or force one policy:
     #                                               requeue|inplace|elastic
+    # -- elastic capacity pool (free-GPU ledger) ----------------------------
+    opportunistic_regrow: bool = True             # shrunken jobs reclaim
+    #                                               width from the free pool
+    borrower: Optional[object] = None             # evalsched TrialBorrower
+    #                                               (reconcile/close protocol)
+    head_delay_sample: int = 64                   # shadow-estimate sampling
+    #                                               (every Nth head; 0 = off;
+    #                                                EASY samples every head)
 
 
 @dataclasses.dataclass
@@ -205,10 +251,20 @@ class ReplayResult:
     verdicts: dict = dataclasses.field(default_factory=dict)
     #   injected class -> Counter of diagnosis verdict classes
     elastic_shrinks: int = 0
-    elastic_regrows: int = 0
+    elastic_regrows: int = 0         # width restored at the lender's REPAIR
     stale_events: int = 0            # lazy-deleted end events
     diagnosis_incidents: int = 0
     diagnosis_pipeline_runs: int = 0
+    # -- elastic capacity pool (free-GPU ledger) ----------------------------
+    pool_regrows: int = 0            # opportunistic regrow events (free pool)
+    pool_regrown_gpus: int = 0       # GPUs reclaimed across those events
+    pool_free_gpu_min: float = 0.0   # time-integrated free (idle) capacity
+    horizon_min: float = 0.0         # last event timestamp (ledger window)
+    borrow: Optional[dict] = None    # TrialBorrower.stats() when borrowing
+    head_delays: list = dataclasses.field(default_factory=list)
+    #   realized minutes each blocked FIFO head waited before starting
+    shadow_errors: list = dataclasses.field(default_factory=list)
+    #   realized-minus-estimated head wait (EASY shadow estimate error)
 
     # -- aggregates ---------------------------------------------------------
 
@@ -280,6 +336,8 @@ class ReplayResult:
                     "incidents": self.diagnosis_incidents,
                     "pipeline_runs": self.diagnosis_pipeline_runs},
             },
+            "pool": pool_stats(self),
+            "head_delay": head_delay_stats(self),
         }
 
 
@@ -341,6 +399,8 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
         j._epoch = 0
         j._prog = 0.0
         j._seg_start = 0.0
+        j._head_since = None
+        j._shadow_est = None
 
     # initial submissions are consumed through a cursor over the
     # time-sorted trace (stable sort == the old (submit, index) heap order,
@@ -356,6 +416,18 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
     hi_types = HIGH_PRIORITY
     # (scheduled_end, job, epoch) for EASY shadow estimation; lazily pruned
     running_ends: list = []
+    # -- elastic capacity pool state ----------------------------------------
+    # shrunken jobs (width < nominal) eligible for opportunistic regrowth,
+    # FIFO by shrink time; entries are dropped lazily once a job regrew to
+    # full width or stopped running
+    shrunken: dict = {}
+    regrow = cfg.opportunistic_regrow
+    borrower = cfg.borrower
+    head_sample = cfg.head_delay_sample
+    # shadow estimation needs the running-ends ledger; maintain it whenever
+    # EASY runs or head-delay sampling is on
+    track_ends = easy or head_sample > 0
+    head_ctr = 0
 
     heappush = heapq.heappush
     heappop = heapq.heappop
@@ -375,8 +447,10 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
     # w/gpus nominal minutes per wall minute, so executed GPU-time for p
     # nominal minutes is p*gpus regardless of the width trajectory.
 
+    ends_cap = 1 << 13
+
     def start(job: JobRecord, now: float) -> None:
-        nonlocal seq
+        nonlocal seq, ends_cap
         sched_start(job)
         job._running = True
         job._width = w = job.gpus
@@ -386,6 +460,15 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
         else:
             job._started = True
             job.queue_min = wait        # the paper's queuing delay (Fig. 6)
+        if job._head_since is not None:
+            # close the head episode: realized head delay, and — when a
+            # shadow estimate was sampled — the estimate's error
+            realized = now - job._head_since
+            result.head_delays.append(realized)
+            if job._shadow_est is not None:
+                result.shadow_errors.append(realized - job._shadow_est)
+                job._shadow_est = None
+            job._head_since = None
         job._prog = job._done
         job._seg_start = now
         job._epoch = ep = job._epoch + 1
@@ -398,8 +481,17 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
             end = now + hit[0]
             heappush(events, (end, seq, FAIL, (job, ep, hit[1])))
         seq += 1
-        if easy:
+        if track_ends:
             running_ends.append((end, job, ep))
+            if len(running_ends) > ends_cap:
+                # shadow_start prunes on use, but between (sampled) calls
+                # the ledger accumulates corpses; live entries are bounded
+                # by running jobs (each holds >=1 GPU). The cap doubles past
+                # the live count so the sweep stays amortized O(1) per
+                # start even on clusters running >8k concurrent jobs.
+                running_ends[:] = [e for e in running_ends
+                                   if e[1]._running and e[2] == e[1]._epoch]
+                ends_cap = max(1 << 13, 2 * len(running_ends))
 
     def schedule_end(job: JobRecord) -> None:
         """(Re)schedule the job's end event from ``_seg_start`` at the
@@ -418,7 +510,7 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
             end = t0 + hit[0]
             heappush(events, (end, seq, FAIL, (job, ep, hit[1])))
         seq += 1
-        if easy:
+        if track_ends:
             running_ends.append((end, job, ep))
 
     def sweep():
@@ -488,6 +580,73 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
             else:
                 i += 1
 
+    def mark_head(job: JobRecord, now: float) -> None:
+        """A job just became the *blocked* head of its FIFO class: open a
+        head episode (realized delay recorded at start) and, on the
+        sampling cadence, take a shadow estimate of its remaining wait."""
+        nonlocal head_ctr
+        if job._head_since is not None:
+            return
+        job._head_since = now
+        head_ctr += 1
+        if head_sample and (easy or head_ctr % head_sample == 0):
+            est = shadow_start(job)
+            if math.isfinite(est):
+                job._shadow_est = max(est - now, 0.0)
+
+    def regrow_pass(now: float) -> None:
+        """Opportunistic regrowth from the free pool: after dispatch has
+        quiesced, leftover free capacity goes back to shrunken jobs (FIFO
+        by shrink time). Runs strictly after the wait queues, and under
+        EASY only when the regrown job's compressed completion still lands
+        before every waiting head's shadow time — the same exchange
+        argument that keeps EASY backfill head-safe (the granted GPUs are
+        all returned at the job's completion, before the shadow instant)."""
+        for jid in list(shrunken):
+            job = shrunken[jid]
+            if not job._running or job._width >= job.gpus:
+                del shrunken[jid]
+                continue
+            kind = job._alloc[0]
+            avail = sched.free_reserved + sched.free_spare \
+                if kind == "hi" else sched.free_spare
+            k = min(job.gpus - job._width, avail)
+            if k <= 0:
+                continue
+            w = job._width
+            if now > job._seg_start:
+                t_base = now
+                prog = job._prog + (now - job._seg_start) * w / job.gpus
+            else:                       # still paying restart re-init
+                t_base = job._seg_start
+                prog = job._prog
+            if easy and (wait_hi or wait_lo):
+                new_end = t_base \
+                    + (job.duration_min - prog) * job.gpus / (w + k)
+                ok = True
+                for q in (wait_hi, wait_lo):
+                    if q and new_end > shadow_start(q[0]) + 1e-9:
+                        ok = False
+                        break
+                if not ok:
+                    continue
+            take_r, take_s = sched.grow(job, k)
+            got = take_r + take_s
+            if got <= 0:
+                continue
+            if now > job._seg_start:
+                if cfg.record_segments:
+                    result.segments.append(
+                        (job.job_id, w, job._seg_start, now, "resize"))
+                job._prog = prog
+                job._seg_start = now
+            job._width = w + got
+            result.pool_regrows += 1
+            result.pool_regrown_gpus += got
+            if job._width >= job.gpus:
+                del shrunken[jid]
+            schedule_end(job)
+
     # try_start runs after every capacity-freeing event, which makes the
     # blocked-head probe the single hottest check of a million-job replay —
     # so the pool test is inlined here (keep in sync with
@@ -522,6 +681,18 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
                 backfill_scan(wait_hi, now)
             if wait_lo:
                 backfill_scan(wait_lo, now)
+        if regrow and shrunken \
+                and sched.free_reserved + sched.free_spare > 0:
+            # two-int guard: under the saturated bench configurations the
+            # pools are usually dry, so skip the shrunken scan entirely
+            regrow_pass(now)
+        if head_sample:
+            # inline the already-marked fast path: try_start runs per event
+            # and the head usually opened its episode long ago
+            if wait_hi and wait_hi[0]._head_since is None:
+                mark_head(wait_hi[0], now)
+            if wait_lo and wait_lo[0]._head_since is None:
+                mark_head(wait_lo[0], now)
 
     def on_arrive(job: JobRecord, now: float) -> None:
         if job.gpus > total_gpus:
@@ -554,6 +725,8 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
             start(job, now)
             return
         q.append(job)
+        if head_sample and len(q) == 1:
+            mark_head(job, now)       # arrived straight into a blocked head
 
     def on_fail(job: JobRecord, cls: ReplayFailureClass, now: float) -> bool:
         """Handle one injected failure; returns True iff pool capacity was
@@ -620,6 +793,7 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
                     fleet.faulty.discard(n)
                 take_r, take_s = sched.release_partial(job, k)
                 job._width = w - k
+                shrunken[job.job_id] = job    # eligible for pool regrowth
                 result.cordon_events += len(det.faulty)
                 result.elastic_shrinks += 1
                 bump_policy(POLICY_ELASTIC, cstats, lost_gpu,
@@ -713,6 +887,9 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
 
     processed = 0
     ai, n_arr = 0, len(arrivals)
+    # free-GPU ledger: capacity is piecewise-constant between events, so
+    # integrating free GPU-minutes only needs a running timestamp
+    pool_t = 0.0
     while True:
         # initial submissions win exact-time ties against dynamic events,
         # matching the old all-in-one-heap sequence numbering
@@ -720,12 +897,25 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
                            or arrivals[ai].submit_min <= events[0][0]):
             job = arrivals[ai]
             ai += 1
+            now = job.submit_min
+            if now > pool_t:
+                result.pool_free_gpu_min += (now - pool_t) * (
+                    sched.free_reserved + sched.free_spare)
+                pool_t = now
             processed += 1
-            on_arrive(job, job.submit_min)
+            on_arrive(job, now)
+            if borrower is not None:
+                # the arrival may have started and consumed leased capacity
+                borrower.reconcile(now, sched.free_reserved
+                                   + sched.free_spare)
             continue
         if not events:
             break
         now, _, kind, payload = heappop(events)
+        if now > pool_t:
+            result.pool_free_gpu_min += (now - pool_t) * (
+                sched.free_reserved + sched.free_spare)
+            pool_t = now
         if kind == FINISH:
             job, epoch = payload
             if epoch != job._epoch:
@@ -748,11 +938,16 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
         elif kind == ARRIVE:
             processed += 1
             on_arrive(payload, now)
+            if borrower is not None:
+                borrower.reconcile(now, sched.free_reserved
+                                   + sched.free_spare)
             continue
         else:  # REPAIR
             processed += 1
             on_repair(payload, now)
         try_start(now)
+        if borrower is not None:
+            borrower.reconcile(now, sched.free_reserved + sched.free_spare)
 
     # jobs still waiting when the event stream drains never ran: give them
     # an unambiguous sentinel instead of the misleading default 0.0
@@ -761,6 +956,10 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
             if not j._started:
                 j.queue_min = NEVER_STARTED
     result.events_processed = processed
+    result.horizon_min = pool_t
+    if borrower is not None:
+        borrower.close(pool_t)
+        result.borrow = borrower.stats()
     if diagnosis is not None:
         result.diagnosis_incidents = diagnosis.incidents - diag_incidents0
         result.diagnosis_pipeline_runs = \

@@ -112,6 +112,28 @@ class ReservationScheduler:
         kind, alloc_r, alloc_s = job._alloc              # type: ignore
         job._alloc = (kind, alloc_r + take_r, alloc_s + take_s)  # type: ignore
 
+    def grow(self, job: JobRecord, gpus: int) -> tuple[int, int]:
+        """Opportunistic elastic regrowth: grant up to ``gpus`` currently
+        *free* GPUs to a running job's allocation (a shrunken job reclaiming
+        width from the pool before its lender node repairs). Admission
+        follows the reservation policy: a job holding a reserved-quota
+        allocation draws reserved-then-spare; a best-effort allocation may
+        only grow from the spare pool, so regrowth can never eat into the
+        pretraining reservation. Returns the (reserved, spare) split
+        granted, which is folded into ``job._alloc`` and comes back to the
+        pools through the ordinary :meth:`finish`."""
+        kind, alloc_r, alloc_s = job._alloc              # type: ignore
+        if kind == "hi":
+            take_r = max(0, min(gpus, self.free_reserved))
+            take_s = max(0, min(gpus - take_r, self.free_spare))
+        else:
+            take_r = 0
+            take_s = max(0, min(gpus, self.free_spare))
+        self.free_reserved -= take_r
+        self.free_spare -= take_s
+        job._alloc = (kind, alloc_r + take_r, alloc_s + take_s)  # type: ignore
+        return take_r, take_s
+
 
 def simulate_queue(jobs: list[JobRecord], total_gpus: int, *,
                    reserved_frac: float = 0.85, backfill: bool = False,

@@ -12,15 +12,27 @@ Decoupled (Fig. 16 right (b), our system):
   3. prior-based elastic scheduling: large datasets are split, runts are
      merged, and the queue is sorted so long-CPU-tail items start first
      (their metric jobs overlap remaining GPU work).
+
+Borrowed capacity (§6.1 x §6.2, the elastic capacity pool): decomposed
+trials are flexible enough to run on *revocable* GPUs, so
+:class:`TrialBorrower` leases idle-fragment and shrunken-job capacity from
+the replay engine's free-GPU ledger (``repro.cluster.replay``). Leases are
+instantly revocable — the lender cluster preempts them the moment a queued
+job dispatches or a shrunken job regrows — and a preempted shard pays only
+the decomposed-trial restart cost, because its outputs were dumped
+incrementally. See ``ReplayConfig.borrower``.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 from typing import Optional
 
 from repro.core.evalsched.simulator import Engine, SimResult
-from repro.core.evalsched.trial import (ClusterSpec, EvalDataset, WorkItem,
-                                        plan_work_items)
+from repro.core.evalsched.trial import (BorrowItem, ClusterSpec, EvalDataset,
+                                        WorkItem, plan_borrow_items,
+                                        plan_work_items, standard_suite)
 
 
 # ---------------------------------------------------------------------------
@@ -93,7 +105,8 @@ def schedule_baseline(datasets: list[EvalDataset],
 
     try_dispatch(eng)
     makespan = eng.run()
-    return SimResult(makespan, acct.busy, acct.held, spec.n_gpus, eng.trace)
+    return SimResult(makespan, acct.busy, acct.held, spec.n_gpus, eng.trace,
+                     eng.completed)
 
 
 # ---------------------------------------------------------------------------
@@ -176,7 +189,179 @@ def schedule_decoupled(datasets: list[EvalDataset], spec: ClusterSpec, *,
                 tag=f"precursor:node{node}")
 
     makespan = eng.run()
-    return SimResult(makespan, acct.busy, acct.held, spec.n_gpus, eng.trace)
+    return SimResult(makespan, acct.busy, acct.held, spec.n_gpus, eng.trace,
+                     eng.completed)
+
+
+# ---------------------------------------------------------------------------
+# borrowing bridge: trials leasing replay free-pool GPUs (§6.1 x §6.2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Lease:
+    """One GPU leased from the replay free pool, running ``item``."""
+    item: BorrowItem
+    t0: float                     # lease acquisition time
+    t_fold: float                 # progress folded up to here
+    done_at: float                # scheduled completion of the current item
+
+
+class TrialBorrower:
+    """Runs decomposed eval shards on revocable GPUs leased from the replay
+    engine's free pool.
+
+    The replay engine drives this object through two calls (the borrower
+    protocol expected by ``ReplayConfig.borrower``):
+
+      ``reconcile(now, free)``  called after every capacity event, with the
+          scheduler's current total free GPUs. The borrower folds lease
+          progress (shards that finished chain into the next pending shard
+          in the same slot), *revokes* newest-first whenever its lease count
+          exceeds ``free`` — leases are strictly lower priority than every
+          queued job and every regrowing shrunken job — and leases
+          additional free GPUs (one shard each, up to ``max_leases``) when
+          capacity is idle. Returns the number of active leases.
+      ``close(now)``            end of replay: folds and releases all
+          leases without counting preemptions.
+
+    Progress accounting is exact and lazy: each slot knows its current
+    shard's completion time, so a reconcile pass is O(1) unless a
+    completion or a revocation actually lands in the elapsed window. A
+    preempted shard keeps its progress (decoupled trials dump outputs
+    incrementally) but pays ``restart_cost_min`` again on its next lease —
+    the §6.2 decomposed-trial restart cost.
+
+    Invariant (property-tested): ``borrowed_gpu_min`` equals the summed
+    per-shard consumption ``work_min + overhead_min - remaining_min``
+    over every shard, leased or not.
+    """
+
+    def __init__(self, items: list, *, restart_cost_min: float = 0.5,
+                 max_leases: int = 32, record_leases: bool = False):
+        self.pending: collections.deque = collections.deque(items)
+        self.items: tuple = tuple(items)
+        self.restart_cost_min = restart_cost_min
+        self.max_leases = max_leases
+        self.active: list[_Lease] = []
+        self.completed: list[str] = []
+        self.borrowed_gpu_min = 0.0   # GPU-minutes held (always working)
+        self.overhead_min = 0.0       # (re)start cost charged across leases
+        self.lease_count = 0
+        self.preemptions = 0
+        # (t_lease, t_release) spans, 1 GPU each, for conservation tests
+        self.lease_records: Optional[list] = [] if record_leases else None
+        self._min_done = math.inf
+
+    @classmethod
+    def from_suite(cls, n_datasets: int = 63, *, repeat: int = 1, seed: int = 0,
+                   shard_target_minutes: float = 4.0,
+                   **kwargs) -> "TrialBorrower":
+        """Borrower over ``repeat`` copies of the standard eval suite (one
+        per tracked checkpoint)."""
+        return cls(plan_borrow_items(standard_suite(n_datasets, seed=seed),
+                                     repeat=repeat,
+                                     shard_target_minutes=shard_target_minutes),
+                   **kwargs)
+
+    # -- internals ----------------------------------------------------------
+
+    def _charge(self, item: BorrowItem) -> None:
+        """One lease acquisition: charge the decomposed-trial (re)start
+        cost and bump the lease counters (kept in one place so the
+        borrowed == work + overhead - remaining invariant has a single
+        accounting site)."""
+        c = self.restart_cost_min
+        item.remaining_min += c
+        item.overhead_min += c
+        item.leases += 1
+        self.overhead_min += c
+        self.lease_count += 1
+
+    def _lease(self, now: float) -> None:
+        item = self.pending.popleft()
+        self._charge(item)
+        lease = _Lease(item, now, now, now + item.remaining_min)
+        self.active.append(lease)
+        if lease.done_at < self._min_done:
+            self._min_done = lease.done_at
+
+    def _fold(self, lease: _Lease, now: float) -> bool:
+        """Advance ``lease`` to ``now``, chaining completed shards into the
+        next pending one. Returns False when the slot ran out of work and
+        released its GPU (mid-window, at the final completion time)."""
+        while True:
+            if now < lease.done_at - 1e-12:
+                step = max(now - lease.t_fold, 0.0)
+                lease.item.remaining_min -= step
+                self.borrowed_gpu_min += step
+                lease.t_fold = now
+                return True
+            t_done = lease.done_at
+            self.borrowed_gpu_min += max(t_done - lease.t_fold, 0.0)
+            lease.item.remaining_min = 0.0
+            self.completed.append(lease.item.name)
+            if self.pending:
+                item = self.pending.popleft()
+                self._charge(item)
+                lease.item = item
+                lease.t0 = t_done        # new lease span, same GPU
+                lease.t_fold = t_done
+                lease.done_at = t_done + item.remaining_min
+                continue
+            if self.lease_records is not None:
+                self.lease_records.append((lease.t0, t_done))
+            return False
+
+    # -- the borrower protocol ---------------------------------------------
+
+    def reconcile(self, now: float, free: int) -> int:
+        active = self.active
+        if active and now >= self._min_done - 1e-12:
+            active = self.active = [l for l in active if self._fold(l, now)]
+            self._min_done = min((l.done_at for l in active),
+                                 default=math.inf)
+        n = len(active)
+        if n > free:
+            while len(active) > free:
+                lease = active.pop()
+                if not self._fold(lease, now):
+                    continue              # ran dry before the revocation
+                self.preemptions += 1
+                self.pending.appendleft(lease.item)
+                if self.lease_records is not None:
+                    self.lease_records.append((lease.t0, now))
+            n = len(active)
+            self._min_done = min((l.done_at for l in active),
+                                 default=math.inf)
+        elif n < free and self.pending and n < self.max_leases:
+            take = min(free - n, self.max_leases - n, len(self.pending))
+            for _ in range(take):
+                self._lease(now)
+            n += take
+        return n
+
+    def close(self, now: float) -> None:
+        """Fold and release every lease (end of replay); unfinished shards
+        return to the pending queue without counting a preemption."""
+        for lease in self.active:
+            if self._fold(lease, now):
+                self.pending.appendleft(lease.item)
+                if self.lease_records is not None:
+                    self.lease_records.append((lease.t0, now))
+        self.active = []
+        self._min_done = math.inf
+
+    def stats(self) -> dict:
+        """JSON-ready borrowing stats for ``ReplayResult.summary()``."""
+        return {
+            "borrowed_gpu_min": self.borrowed_gpu_min,
+            "borrowed_gpu_hours": self.borrowed_gpu_min / 60.0,
+            "leases": self.lease_count,
+            "preemptions": self.preemptions,
+            "restart_overhead_min": self.overhead_min,
+            "shards_completed": len(self.completed),
+            "shards_pending": len(self.pending) + len(self.active),
+        }
 
 
 # ---------------------------------------------------------------------------

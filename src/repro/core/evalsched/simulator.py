@@ -33,6 +33,7 @@ class Engine:
         self._ids = itertools.count()
         self.rate_fn: Optional[Callable[[Task, "Engine"], float]] = None
         self.trace: list[tuple[float, str]] = []
+        self.completed = 0        # total task completions (throughput probe)
 
     # -- task management ------------------------------------------------------
 
@@ -65,6 +66,7 @@ class Engine:
                     done.append(tid)
             for tid in done:
                 t = self.tasks.pop(tid)
+                self.completed += 1
                 if t.tag:
                     self.trace.append((self.t, t.tag))
                 t.on_done(self)
@@ -78,6 +80,7 @@ class SimResult:
     gpu_held_minutes: float       # GPU allocated to a trial (incl. idle)
     n_gpus: int
     trace: list[tuple[float, str]]
+    n_events: int = 0             # engine task completions (throughput probe)
 
     @property
     def gpu_utilization(self) -> float:

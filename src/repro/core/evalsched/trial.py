@@ -171,3 +171,50 @@ def _bundle(ds: list[EvalDataset]) -> WorkItem:
         sum(d.cpu_metric_minutes for d in ds),
         sum(d.preprocess_minutes for d in ds),
         tuple(d.name for d in ds))
+
+
+# ---------------------------------------------------------------------------
+# borrowed-capacity trials: single-GPU shards leased from the replay free
+# pool (the §6.2 side of the elastic capacity pool)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BorrowItem:
+    """One preemptible single-GPU trial shard for the borrowing bridge.
+
+    ``remaining_min`` is mutable execution state: it starts at the shard's
+    GPU minutes, has the decomposed-trial (re)start cost added on every
+    lease (the model must be re-staged from node shm and the prompt cache
+    rebuilt), and ticks down while the shard holds a leased GPU. Progress
+    is *kept* across preemptions — decoupled trials dump outputs
+    incrementally (§6.2), so a revoked lease costs only the restart
+    overhead, not the shard's in-flight work.
+    """
+    name: str
+    work_min: float               # nominal single-GPU inference minutes
+    remaining_min: float = 0.0    # work (+ charged overheads) still to run
+    leases: int = 0               # times this shard acquired a GPU
+    overhead_min: float = 0.0     # total (re)start cost charged so far
+
+    def __post_init__(self):
+        if self.remaining_min == 0.0:
+            self.remaining_min = self.work_min
+
+
+def plan_borrow_items(datasets: list[EvalDataset], *, repeat: int = 1,
+                      shard_target_minutes: float = 4.0) -> list:
+    """Decompose ``datasets`` into preemptible single-GPU shards for
+    :class:`~repro.core.evalsched.coordinator.TrialBorrower`.
+
+    Reuses the coordinator's prior-based split/merge planning (so shard
+    sizes bound the work a preemption can ever strand) and repeats the
+    suite ``repeat`` times — one copy per tracked checkpoint, matching the
+    paper's per-checkpoint evaluation batches."""
+    items: list[BorrowItem] = []
+    planned = plan_work_items(datasets, n_gpus=1,
+                              split_target_minutes=shard_target_minutes)
+    for rep in range(max(repeat, 1)):
+        for w in planned:
+            name = w.name if repeat <= 1 else f"ckpt{rep}:{w.name}"
+            items.append(BorrowItem(name, w.gpu_minutes))
+    return items

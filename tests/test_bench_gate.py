@@ -20,6 +20,8 @@ def _write(dirp, bench, metrics):
 def _write_all(dirp, scale=1.0):
     _write(dirp, "replay", {"events_per_calib": 0.8 * scale,
                             "events_per_sec": 150e3 * scale})
+    _write(dirp, "pool", {"events_per_calib": 0.4 * scale})
+    _write(dirp, "evalsched", {"events_per_calib": 2.0 * scale})
     _write(dirp, "detection", {"n128_probe_savings": 120.0 * scale,
                                "n512_probe_savings": 490.0 * scale})
     _write(dirp, "checkpoint", {"7B-analog_stall_reduction": 10.0 * scale,
