@@ -1,4 +1,5 @@
-"""Elastic capacity pool: free-pool regrowth + evalsched GPU borrowing.
+"""Elastic capacity pool: free-pool regrowth + evalsched GPU borrowing,
+now with node-local revocable leases.
 
 The pool unifies the paper's two §6 systems over one free-GPU ledger
 (``repro.cluster.replay``): shrunken elastic jobs (§6.1) reclaim width from
@@ -9,7 +10,16 @@ This bench characterizes both sides at Seren scale (fast mode: Kalos 20k):
 
   * regrowth — with the pool ON, essentially every elastic shrink regrows
     (vs the repair-only world where most shrunken jobs *finish* before the
-    node returns); reported as regrow events per shrink in both worlds;
+    node returns); reported as regrow events per shrink in both worlds,
+    plus the explicit re-shard stall regrowth now pays;
+  * placement — leases are node-local (``placement=True``): borrowed eval
+    shards land on concrete ``SimulatedFleet`` nodes and their model loads
+    share that node's 25 Gb/s storage NIC, so the Fig. 16 load collapse
+    shows up inside the replay (``summary()["placement"]``);
+  * best-effort tier — checkpointed low-priority jobs run on revocable
+    leases over idle capacity (including the pretraining reservation) and
+    are preempted back to their last checkpoint when dispatch or regrowth
+    reclaims the lease: the §3.2 quota-reclamation preemption as policy;
   * borrowing — borrowed GPU-hours, lease/preemption counts and the share
     of otherwise-idle free capacity the trials soak up;
   * head-delay tail — the EASY shadow-estimate error figure: a conservative
@@ -18,28 +28,42 @@ This bench characterizes both sides at Seren scale (fast mode: Kalos 20k):
     foresee move the realized start; the p50/p95/p99 error is the paper's
     "how wrong is the estimate at scale" characterization;
   * throughput — a fixed interleaved-calibration probe over the EASY +
-    borrower + elastic configuration yields ``events_per_calib``, gated by
-    ``benchmarks.check_regression`` alongside the replay/evalsched gates.
+    borrower + placement + best-effort configuration yields
+    ``events_per_calib``, gated by ``benchmarks.check_regression``
+    alongside the replay/evalsched gates.
+
+One ``DiagnosisLoop`` is shared across every world and the probe, so the
+verdict cache stays warm between runs while each ``ReplayResult`` still
+reports per-run deltas (regression-tested in ``tests/test_replay.py``).
 """
 from __future__ import annotations
 
 import time
 
 from benchmarks.common import Row, calibrated_probe, emit
-from repro.cluster import (KALOS, SEREN, FailureInjector, ReplayConfig,
-                           generate_jobs, replay_trace)
-from repro.core.evalsched import TrialBorrower
+from repro.cluster import (KALOS, SEREN, DiagnosisLoop, FailureInjector,
+                           ReplayConfig, generate_jobs, replay_trace)
+from repro.core.evalsched import STORAGE_SPEC, TrialBorrower
 
 N_JOBS_FULL = 200_000            # Seren slice: saturated spare pool
 N_JOBS_FAST = 20_000
 N_JOBS_PROBE = 50_000            # fixed CI-gate throughput probe
 
+BEST_EFFORT_FRAC = 0.3           # share of eligible jobs on revocable leases
+RESHARD_COST_MIN = 1.0           # explicit regrow re-shard stall
 
-def _config(*, regrow: bool = True, borrower=None, backfill=False
-            ) -> ReplayConfig:
+
+def _borrower(*, repeat: int) -> TrialBorrower:
+    return TrialBorrower.from_suite(63, repeat=repeat, spec=STORAGE_SPEC)
+
+
+def _config(loop: DiagnosisLoop, *, regrow: bool = True, borrower=None,
+            backfill=False, placement: bool = False) -> ReplayConfig:
     return ReplayConfig(injector=FailureInjector(seed=1, rate_scale=2.0),
-                        diagnose=True, elastic=True,
+                        diagnosis=loop, elastic=True,
                         opportunistic_regrow=regrow,
+                        placement=placement,
+                        reshard_cost_min=RESHARD_COST_MIN,
                         borrower=borrower, backfill=backfill)
 
 
@@ -47,21 +71,28 @@ def run(fast: bool = False) -> list[Row]:
     spec = KALOS if fast else SEREN
     n_jobs = N_JOBS_FAST if fast else N_JOBS_FULL
     frac = 0.97 if fast else 0.95
-    jobs = generate_jobs(spec, seed=0, n_jobs=n_jobs)
+    jobs = generate_jobs(spec, seed=0, n_jobs=n_jobs,
+                         best_effort_frac=BEST_EFFORT_FRAC)
+    loop = DiagnosisLoop()       # shared: warm verdict cache across worlds
 
     # 1) repair-only world (PR-2 semantics): width returns only at REPAIR
     off = replay_trace(jobs, spec.n_gpus, reserved_frac=frac,
-                       config=_config(regrow=False))
+                       config=_config(loop, regrow=False))
     off_shrinks = max(off.elastic_shrinks, 1)
     off_ratio = off.elastic_regrows / off_shrinks
 
-    # 2) pool world: opportunistic regrowth + trial borrowing
-    borrower = TrialBorrower.from_suite(63, repeat=100 if fast else 500)
+    # 2) pool world: node-local placement + opportunistic regrowth +
+    #    best-effort revocable leases + trial borrowing
+    borrower = _borrower(repeat=100 if fast else 500)
     t0 = time.perf_counter()
     on = replay_trace(jobs, spec.n_gpus, reserved_frac=frac,
-                      config=_config(borrower=borrower))
+                      config=_config(loop, borrower=borrower,
+                                     placement=True))
     wall = time.perf_counter() - t0
-    pool = on.summary()["pool"]
+    s = on.summary()
+    pool = s["pool"]
+    placement = s["placement"]
+    be = pool["best_effort"]
     on_shrinks = max(on.elastic_shrinks, 1)
     on_ratio = (pool["regrowth"]["pool_regrows"]
                 + pool["regrowth"]["repair_regrows"]) / on_shrinks
@@ -69,19 +100,23 @@ def run(fast: bool = False) -> list[Row]:
 
     # 3) EASY world: head-delay tail + shadow-estimate error (the figure)
     easy = replay_trace(jobs, spec.n_gpus, reserved_frac=frac,
-                        config=_config(backfill="easy"))
+                        config=_config(loop, backfill="easy"))
     hd = easy.summary()["head_delay"]
     err = hd["shadow_error"]
 
-    # 4) fixed-shape calibrated throughput probe (EASY + borrower + elastic:
-    #    the most machinery the engine can run at once); methodology in
-    #    benchmarks.common.calibrated_probe, shared with the replay gate
-    probe_jobs = generate_jobs(KALOS, seed=0, n_jobs=N_JOBS_PROBE)
+    # 4) fixed-shape calibrated throughput probe (EASY + borrower +
+    #    placement + best-effort: the most machinery the engine can run at
+    #    once); methodology in benchmarks.common.calibrated_probe, shared
+    #    with the replay gate
+    probe_jobs = generate_jobs(KALOS, seed=0, n_jobs=N_JOBS_PROBE,
+                               best_effort_frac=BEST_EFFORT_FRAC)
     events_per_calib = calibrated_probe(
         lambda: replay_trace(
             probe_jobs, KALOS.n_gpus, reserved_frac=0.97,
-            config=_config(borrower=TrialBorrower.from_suite(63, repeat=50),
-                           backfill="easy")).events_processed)
+            config=_config(loop,
+                           borrower=_borrower(repeat=50),
+                           backfill="easy",
+                           placement=True)).events_processed)
 
     return [
         Row("pool", "n_jobs", float(n_jobs), "", "", None),
@@ -105,6 +140,33 @@ def run(fast: bool = False) -> list[Row]:
             on_ratio > off_ratio),
         Row("pool", "pool_regrown_gpus",
             float(pool["regrowth"]["pool_regrown_gpus"]), "", ""),
+        Row("pool", "reshard_stall_min",
+            pool["regrowth"]["reshard_stall_min"],
+            "explicit regrow re-shard cost", "min",
+            pool["regrowth"]["reshard_stall_min"] > 0
+            if pool["regrowth"]["events"] else None),
+        # -- node-local placement (Fig. 16 collapse in the replay) ----------
+        Row("pool", "placement_nodes", float(placement.get("n_nodes", 0)),
+            "leases tied to SimulatedFleet nodes", "",
+            placement.get("n_nodes", 0) > 0),
+        Row("pool", "borrow_load_max_concurrency",
+            float(placement.get("max_load_concurrency", 0)),
+            "loads sharing one node NIC", "",
+            None if fast else placement.get("max_load_concurrency", 0) >= 2),
+        Row("pool", "borrow_load_collapse_x",
+            placement.get("load_collapse_x", 0.0),
+            "Fig. 16: load slows when sharing the NIC", "",
+            None if fast else placement.get("load_collapse_x", 0.0) > 1.0),
+        # -- best-effort revocable leases (§3.2 quota reclamation) ----------
+        Row("pool", "best_effort_jobs", float(be["jobs"]),
+            "checkpointed jobs on revocable leases", "", be["jobs"] > 0),
+        Row("pool", "best_effort_lease_starts", float(be["lease_starts"]),
+            "", "", be["lease_starts"] > 0),
+        Row("pool", "best_effort_revocations", float(be["revocations"]),
+            "quota reclaimed by dispatch/regrowth", "",
+            None if fast else be["revocations"] > 0),
+        Row("pool", "best_effort_lost_gpu_hours", be["lost_gpu_hours"],
+            "rolled back to the last checkpoint", "GPUh"),
         # -- borrowing ------------------------------------------------------
         Row("pool", "borrowed_gpu_hours", borrow["borrowed_gpu_hours"],
             "trials ran on leased free-pool GPUs", "GPUh",
@@ -117,7 +179,7 @@ def run(fast: bool = False) -> list[Row]:
             borrow["shards_completed"] > 0),
         Row("pool", "borrow_restart_overhead_min",
             borrow["restart_overhead_min"],
-            "decomposed-trial restart cost", "min"),
+            "decomposed-trial restart + NIC reload cost", "min"),
         # -- EASY head-delay tail (shadow-estimate error figure) ------------
         Row("pool", "easy_head_delay_p50_min", hd["p50_min"], "", "min",
             hd["n"] > 0),
@@ -129,6 +191,10 @@ def run(fast: bool = False) -> list[Row]:
             abs(err["p50_min"]) < 1.0),
         Row("pool", "easy_shadow_error_p99_min", err["p99_min"],
             "tail = unforeseen failures/repairs", "min", err["n"] > 0),
+        # -- shared diagnosis loop ------------------------------------------
+        Row("pool", "diagnosis_pipeline_runs_total", float(loop.pipeline_runs),
+            "verdict cache shared across worlds", "",
+            0 < loop.pipeline_runs <= 3 * 32),
     ]
 
 

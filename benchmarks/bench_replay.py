@@ -6,8 +6,9 @@ unified scheduler/failure engine with §6.1 diagnosis-in-the-loop recovery
 
   * throughput — the 1M-job injected+diagnosed replay, now with the full
     elastic capacity pool attached (opportunistic free-pool regrowth +
-    evalsched trial borrowing + head-delay tracking), must finish in
-    <=30 s on CPU, and a fixed probe run in *both* modes yields
+    node-local placement, best-effort revocable leases, evalsched trial
+    borrowing + head-delay tracking), must finish within
+    ``FULL_WALL_TARGET_S`` on CPU, and a fixed probe run in *both* modes yields
     ``events_per_calib``, a CPU-calibrated, mode-independent throughput
     number that ``benchmarks.check_regression`` gates CI on;
   * parity — with injection disabled the engine must reproduce
@@ -31,22 +32,31 @@ from benchmarks.common import ARTIFACTS, Row, calibrated_probe, emit
 from repro.cluster import (KALOS, SEREN, FailureInjector, ReplayConfig,
                            generate_jobs, recovery_stats, replay_trace,
                            simulate_queue)
-from repro.core.evalsched import TrialBorrower
+from repro.core.evalsched import STORAGE_SPEC, TrialBorrower
 
 N_JOBS_FULL = 1_000_000          # the full Seren trace (paper §3, Fig. 4)
 N_JOBS_FAST = 20_000
 N_JOBS_PROBE = 100_000           # fixed CI-gate throughput probe
 
-FULL_WALL_TARGET_S = 30.0        # 1M injected+diagnosed+pool replay on CPU
+# 1M injected+diagnosed+pool replay on CPU. The node-local machinery
+# (placement ledger + best-effort leases) costs ~40% over the PR-3 engine
+# and shared-runner contention swings the wall up to ~1.8x run-to-run —
+# the *gated* number is the calibrated events_per_calib probe, this wall
+# target is an advisory sanity bound
+FULL_WALL_TARGET_S = 45.0
+
+BEST_EFFORT_FRAC = 0.3           # share of eligible jobs on revocable leases
 
 
 def _injected_config() -> ReplayConfig:
     # the full elastic capacity pool: diagnosis-driven elastic shrink,
-    # opportunistic regrowth (on by default) and eval trials borrowing
-    # free-pool GPUs — the probe therefore gates the ledger overhead too
+    # opportunistic regrowth (on by default), node-local placement with
+    # best-effort revocable leases, and eval trials borrowing free-pool
+    # GPUs — the probe therefore gates the whole ledger overhead too
+    borrower = TrialBorrower.from_suite(63, repeat=200, spec=STORAGE_SPEC)
     return ReplayConfig(injector=FailureInjector(seed=1, rate_scale=2.0),
-                        diagnose=True, elastic=True,
-                        borrower=TrialBorrower.from_suite(63, repeat=200))
+                        diagnose=True, elastic=True, placement=True,
+                        reshard_cost_min=1.0, borrower=borrower)
 
 
 def run(fast: bool = False) -> list[Row]:
@@ -56,7 +66,8 @@ def run(fast: bool = False) -> list[Row]:
     # spare pool saturates above ~0.95 (every best-effort class then waits
     # forever) while Kalos at 20k needs 0.97 to show the eval inversion
     frac = 0.97 if fast else 0.95
-    jobs = generate_jobs(spec, seed=0, n_jobs=n_jobs)
+    jobs = generate_jobs(spec, seed=0, n_jobs=n_jobs,
+                         best_effort_frac=BEST_EFFORT_FRAC)
 
     # 1) baseline queue replay (the old simulate_queue semantics)
     t0 = time.perf_counter()
@@ -81,10 +92,12 @@ def run(fast: bool = False) -> list[Row]:
     # 4) fixed-shape throughput probe (identical in both modes, so the CI
     #    regression gate always compares like with like); see
     #    benchmarks.common.calibrated_probe for the methodology
-    probe_jobs = generate_jobs(KALOS, seed=0, n_jobs=N_JOBS_PROBE)
+    probe_jobs = generate_jobs(KALOS, seed=0, n_jobs=N_JOBS_PROBE,
+                               best_effort_frac=BEST_EFFORT_FRAC)
     events_per_calib = calibrated_probe(
         lambda: replay_trace(probe_jobs, KALOS.n_gpus, reserved_frac=0.97,
-                             config=_injected_config()).events_processed)
+                             config=_injected_config())
+        .events_processed)
 
     os.makedirs(ARTIFACTS, exist_ok=True)
     with open(os.path.join(ARTIFACTS, "replay_summary.json"), "w") as f:
@@ -167,6 +180,21 @@ def run(fast: bool = False) -> list[Row]:
             "blocked-head wait tail", "min", hd["n"] > 0),
         Row("replay", "head_delay_p95_min", hd["p95_min"], "", "min"),
         Row("replay", "head_delay_p99_min", hd["p99_min"], "", "min"),
+    ]
+    # -- node-local leases: placement + best-effort tier --------------------
+    be = pool["best_effort"]
+    placement = s["placement"]
+    rows += [
+        Row("replay", "best_effort_lease_starts", float(be["lease_starts"]),
+            "checkpointed jobs on revocable leases", "",
+            be["lease_starts"] > 0),
+        Row("replay", "best_effort_revocations", float(be["revocations"]),
+            "§3.2 quota reclamation as policy", "",
+            None if fast else be["revocations"] > 0),
+        Row("replay", "borrow_load_collapse_x",
+            placement.get("load_collapse_x", 0.0),
+            "Fig. 16 NIC collapse inside the replay", "",
+            None if fast else placement.get("load_collapse_x", 0.0) > 1.0),
     ]
     return rows
 

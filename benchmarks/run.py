@@ -1,10 +1,20 @@
 """Benchmark runner: one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+
+After a run that produced all three gated throughput artifacts
+(replay/pool/evalsched), the runner consolidates their ``events_per_calib``
+values into ``BENCH_replay.json`` — a per-commit *trajectory* of the
+calibrated throughput history. The fresh file extends the committed
+baseline's history (``artifacts/bench/BENCH_replay.json``), so CI uploads
+carry the whole perf history across PRs instead of one point per run.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
 import time
 import traceback
 
@@ -12,7 +22,64 @@ from benchmarks import (bench_checkpoint, bench_detection, bench_diagnosis,
                         bench_evalsched, bench_moe_comm, bench_pool,
                         bench_recovery, bench_replay, bench_roofline,
                         bench_trace)
-from benchmarks.common import emit
+from benchmarks.common import ARTIFACTS, emit
+
+# benches whose calibrated throughput forms the consolidated trajectory
+TRAJECTORY_BENCHES = ("replay", "pool", "evalsched")
+TRAJECTORY_BASELINE = os.path.join("artifacts", "bench", "BENCH_replay.json")
+
+
+def _run_label() -> str:
+    """Commit-ish label for a trajectory entry: CI sha, else git, else
+    'local'."""
+    sha = os.environ.get("GITHUB_SHA", "")
+    if not sha:
+        try:
+            sha = subprocess.run(["git", "rev-parse", "HEAD"],
+                                 capture_output=True, text=True,
+                                 timeout=10).stdout.strip()
+        except (OSError, subprocess.SubprocessError):
+            sha = ""
+    return sha[:12] or "local"
+
+
+def write_trajectory(artifacts_dir: str = ARTIFACTS,
+                     baseline_path: str = TRAJECTORY_BASELINE,
+                     label: str | None = None) -> dict | None:
+    """Consolidate this run's gated ``events_per_calib`` values into
+    ``<artifacts_dir>/BENCH_replay.json``, extending the committed
+    baseline's history (same-label entries are replaced, so re-runs do not
+    duplicate). Returns the written document, or ``None`` when any of the
+    three gated artifacts is missing. The caller must ensure the artifacts
+    were produced by *this* invocation — ``main`` only consolidates when
+    every trajectory bench actually ran and succeeded, so a ``--only`` or
+    partially-failed run can never relabel stale numbers as fresh."""
+    entry: dict = {"label": label or _run_label(),
+                   "date": time.strftime("%Y-%m-%d")}
+    for bench in TRAJECTORY_BENCHES:
+        path = os.path.join(artifacts_dir, f"{bench}.json")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            rows = json.load(f)
+        value = next((r["value"] for r in rows
+                      if r["metric"] == "events_per_calib"), None)
+        if value is None:
+            return None
+        entry[bench] = float(value)
+    history: list = []
+    if os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            history = json.load(f).get("history", [])
+    history = [e for e in history if e.get("label") != entry["label"]]
+    history.append(entry)
+    doc = {"metric": "events_per_calib", "benches": list(TRAJECTORY_BENCHES),
+           "history": history}
+    out = os.path.join(artifacts_dir, "BENCH_replay.json")
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# trajectory: {out} ({len(history)} entries)")
+    return doc
 
 BENCHES = {
     "trace": bench_trace,              # §3, Fig. 2/3/4/6/17
@@ -36,16 +103,23 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
     failures = []
+    succeeded = []
     for name, mod in BENCHES.items():
         if args.only and name != args.only:
             continue
         t0 = time.time()
         try:
             emit(mod.run(args.fast), name)
+            succeeded.append(name)
             print(f"# {name} done in {time.time() - t0:.1f}s\n")
         except Exception:  # noqa: BLE001
             failures.append(name)
             print(f"# {name} FAILED:\n{traceback.format_exc()}")
+    if all(b in succeeded for b in TRAJECTORY_BENCHES):
+        # only artifacts produced by THIS invocation may enter the
+        # trajectory — a --only or partially-failed run must not relabel
+        # stale on-disk numbers as a fresh history point
+        write_trajectory()
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")
 

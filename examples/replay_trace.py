@@ -32,8 +32,20 @@ that exercises scheduling and fault tolerance in one scenario:
      the pool ledger — borrowed GPU-hours, lease/preemption counts,
      regrowth events and the blocked-head delay tail.
 
+  7. with ``--placement``, every lease becomes *node-local*: a NodeLedger
+     mirrors the capacity movements onto SimulatedFleet nodes, borrowed
+     shards land on concrete nodes and their model loads share that
+     node's 25 Gb/s storage NIC — the Fig. 16 load collapse, printed from
+     ``summary()["placement"]``;
+  8. with ``--best-effort FRAC``, that share of eligible jobs runs as
+     *checkpointed best-effort* on revocable leases over idle capacity
+     (including the pretraining reservation): the §3.2 quota-reclamation
+     preemption as a scheduling policy — revocations roll the job back to
+     its last checkpoint and requeue it.
+
   PYTHONPATH=src python examples/replay_trace.py \
-      [--jobs N] [--elastic] [--borrow] [--backfill {greedy,easy}]
+      [--jobs N] [--elastic] [--borrow] [--placement] \
+      [--best-effort FRAC] [--backfill {greedy,easy}]
 """
 import argparse
 import time
@@ -42,7 +54,7 @@ import numpy as np
 
 from repro.cluster import (KALOS, FailureInjector, ReplayConfig,
                            generate_jobs, recovery_stats, replay_trace)
-from repro.core.evalsched import TrialBorrower
+from repro.core.evalsched import STORAGE_SPEC, TrialBorrower
 
 
 def _queue_medians(jobs) -> dict:
@@ -64,6 +76,13 @@ def main() -> None:
     ap.add_argument("--borrow", action="store_true",
                     help="lease free-pool GPUs to decomposed eval trials "
                          "(the §6.1 x §6.2 elastic capacity pool)")
+    ap.add_argument("--placement", action="store_true",
+                    help="node-local leases: borrowed shards land on "
+                         "concrete nodes and share the node storage NIC")
+    ap.add_argument("--best-effort", type=float, default=0.0,
+                    metavar="FRAC",
+                    help="run FRAC of eligible jobs as checkpointed "
+                         "best-effort on revocable leases")
     ap.add_argument("--backfill", choices=["greedy", "easy"], default=None,
                     help="also replay with a backfill policy")
     ap.add_argument("--rate-scale", type=float, default=2.0,
@@ -71,7 +90,8 @@ def main() -> None:
     args = ap.parse_args()
 
     print(f"=== generating {args.jobs} Kalos jobs ===")
-    jobs = generate_jobs(KALOS, seed=0, n_jobs=args.jobs)
+    jobs = generate_jobs(KALOS, seed=0, n_jobs=args.jobs,
+                         best_effort_frac=args.best_effort)
 
     print("\n=== world 1: no failures (pure §3.2 queue replay) ===")
     t0 = time.perf_counter()
@@ -83,14 +103,17 @@ def main() -> None:
         print(f"  queue median {t:12s} {m:7.2f} min")
 
     print("\n=== world 2: §5 failures + §6.1 diagnosis-in-the-loop ===")
-    borrower = (TrialBorrower.from_suite(63, repeat=20)
+    spec = STORAGE_SPEC if args.placement else None
+    borrower = (TrialBorrower.from_suite(63, repeat=20, spec=spec)
                 if args.borrow else None)
     t0 = time.perf_counter()
     res = replay_trace(
         jobs, KALOS.n_gpus, reserved_frac=0.97,
         config=ReplayConfig(
             injector=FailureInjector(seed=1, rate_scale=args.rate_scale),
-            diagnose=True, elastic=args.elastic, borrower=borrower))
+            diagnose=True, elastic=args.elastic, borrower=borrower,
+            placement=args.placement,
+            reshard_cost_min=1.0 if args.elastic else 0.0))
     print(f"replayed in {time.perf_counter() - t0:.1f}s "
           f"({res.events_processed} events)")
     s = res.summary()
@@ -126,7 +149,22 @@ def main() -> None:
         print(f"  elastic: {pr['shrinks']} shrinks; regrowth "
               f"{pr['pool_regrows']} from the free pool + "
               f"{pr['repair_regrows']} at the lender's repair "
-              f"({pr['pool_regrown_gpus']} GPUs reclaimed early)")
+              f"({pr['pool_regrown_gpus']} GPUs reclaimed early, "
+              f"{pr['reshard_stall_min']:.0f} min re-shard stall paid)")
+    if args.best_effort > 0:
+        be = s["pool"]["best_effort"]
+        print(f"  best-effort tier: {be['jobs']} checkpointed jobs, "
+              f"{be['lease_starts']} lease starts, "
+              f"{be['revocations']} quota-reclamation revocations "
+              f"({be['lost_gpu_hours']:.1f} GPUh rolled back)")
+    if args.placement:
+        p = s["placement"]
+        print(f"  placement: {p['n_nodes']} nodes x {p['node_gpus']} GPUs, "
+              f"{p['cordoned_nodes']} cordoned at drain")
+        if "load_collapse_x" in p:
+            print(f"    borrowed-load NIC collapse: up to "
+                  f"{p['max_load_concurrency']} loads/node, slowest load "
+                  f"{p['load_collapse_x']:.2f}x the solo load (Fig. 16)")
     if args.borrow:
         b = s["pool"]["borrow"]
         hd = s["head_delay"]

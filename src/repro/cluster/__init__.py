@@ -1,21 +1,24 @@
 """Simulated datacenter: workload generator, scheduler, failure-aware trace
 replay, trace analysis (§3 + §5)."""
-from repro.cluster.workload import (JobRecord, WorkloadSpec, KALOS, SEREN,
+from repro.cluster.workload import (BEST_EFFORT_TYPES, JobRecord,
+                                    WorkloadSpec, KALOS, SEREN,
                                     generate_jobs)
 from repro.cluster.scheduler import (NEVER_STARTED, ReservationScheduler,
                                      simulate_queue)
-from repro.cluster.failures import (DEFAULT_TAXONOMY, FailureInjector,
-                                    ReplayFailureClass,
+from repro.cluster.failures import (DEFAULT_TAXONOMY, QUOTA_RECLAIM,
+                                    FailureInjector, ReplayFailureClass,
                                     synthesize_failure_log)
-from repro.cluster.replay import (DiagnosisLoop, ReplayConfig, ReplayResult,
-                                  replay_trace)
-from repro.cluster.analysis import (head_delay_stats, pool_stats,
-                                    recovery_stats, trace_summary)
+from repro.cluster.replay import (DiagnosisLoop, NodeLedger, ReplayConfig,
+                                  ReplayResult, replay_trace)
+from repro.cluster.analysis import (head_delay_stats, placement_stats,
+                                    pool_stats, recovery_stats,
+                                    trace_summary)
 
 __all__ = ["JobRecord", "WorkloadSpec", "KALOS", "SEREN", "generate_jobs",
+           "BEST_EFFORT_TYPES",
            "ReservationScheduler", "simulate_queue", "NEVER_STARTED",
            "FailureInjector", "ReplayFailureClass", "DEFAULT_TAXONOMY",
-           "synthesize_failure_log", "DiagnosisLoop",
-           "ReplayConfig", "ReplayResult", "replay_trace",
-           "head_delay_stats", "pool_stats", "recovery_stats",
-           "trace_summary"]
+           "QUOTA_RECLAIM", "synthesize_failure_log", "DiagnosisLoop",
+           "NodeLedger", "ReplayConfig", "ReplayResult", "replay_trace",
+           "head_delay_stats", "placement_stats", "pool_stats",
+           "recovery_stats", "trace_summary"]

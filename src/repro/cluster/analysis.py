@@ -11,6 +11,7 @@ from typing import Iterable
 
 import numpy as np
 
+from repro.cluster.failures import QUOTA_RECLAIM
 from repro.cluster.workload import JobRecord
 
 
@@ -182,12 +183,15 @@ def head_delay_stats(result) -> dict:
 
 def pool_stats(result) -> dict:
     """Elastic-capacity-pool ledger stats (§6.1 x §6.2): time-integrated
-    free capacity, opportunistic regrowth activity, and — when a
-    ``TrialBorrower`` was attached — borrowed GPU-minutes, lease and
-    preemption counts. Needs a ``replay_trace`` ReplayResult."""
+    free capacity, opportunistic regrowth activity (incl. the explicit
+    re-shard stalls it paid), the best-effort revocable-lease tier, and —
+    when a ``TrialBorrower`` was attached — borrowed GPU-minutes, lease
+    and preemption counts. Needs a ``replay_trace`` ReplayResult."""
     borrow = result.borrow or {}
     borrowed = borrow.get("borrowed_gpu_min", 0.0)
     free = result.pool_free_gpu_min
+    reclaim = result.by_class.get(QUOTA_RECLAIM)
+    be_jobs = [j for j in result.jobs if j.best_effort]
     return {
         "free_gpu_hours": free / 60.0,
         "horizon_min": result.horizon_min,
@@ -199,12 +203,50 @@ def pool_stats(result) -> dict:
             "pool_regrown_gpus": result.pool_regrown_gpus,
             "repair_regrows": result.elastic_regrows,
             "shrinks": result.elastic_shrinks,
+            "reshard_events": result.pool_reshard_events,
+            "reshard_stall_min": result.pool_reshard_min,
+        },
+        "best_effort": {
+            # the revocable-lease tier: §3.2 quota reclamation as policy
+            "jobs": len(be_jobs),
+            "lease_starts": result.be_lease_starts,
+            "revocations": reclaim.failures if reclaim else 0,
+            "lost_gpu_hours": reclaim.lost_gpu_min / 60.0 if reclaim else 0.0,
+            "revoke_overhead_min": reclaim.overhead_min if reclaim else 0.0,
+            "never_started": sum(1 for j in be_jobs if not j.started),
         },
         "borrow": borrow,
         "borrowed_gpu_min": borrowed,
         # share of otherwise-idle free capacity the eval trials soaked up
         "borrow_utilization": borrowed / free if free > 0 else 0.0,
     }
+
+
+def placement_stats(result) -> dict:
+    """Node-local placement view (§6.1 x §6.2, Fig. 16): where the
+    ``NodeLedger`` stood at drain, and how borrowed eval shards' model
+    loads collapsed under per-node storage-NIC contention. Empty when
+    ``ReplayConfig.placement`` is off.
+
+    ``load_by_concurrency`` bins each borrowed lease's realized model-load
+    minutes by the number of loads sharing its node's NIC at acquisition;
+    ``load_collapse_x`` is the mean load time at the highest observed
+    concurrency over the solo (k=1) load — the paper's Fig. 16-left
+    stress curve reproduced inside the replay."""
+    base = result.placement
+    if not base:
+        return {}
+    out = dict(base)
+    borrow = (result.borrow or {}).get("placement") or {}
+    bins = borrow.get("load_by_concurrency") or {}
+    if bins:
+        ks = sorted(bins)
+        solo = bins[ks[0]]["mean_load_min"]
+        peak = bins[ks[-1]]["mean_load_min"]
+        out["load_by_concurrency"] = {str(k): bins[k] for k in ks}
+        out["max_load_concurrency"] = ks[-1]
+        out["load_collapse_x"] = peak / solo if solo > 0 else 0.0
+    return out
 
 
 def trace_summary(jobs: list[JobRecord], n_gpus: int,

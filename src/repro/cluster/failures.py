@@ -35,6 +35,13 @@ from typing import Optional, Sequence
 
 HARDWARE, INFRA, PREEMPTION = "hardware", "infra", "preemption"
 
+# the *emergent* counterpart of the injected PREEMPTION class: a best-effort
+# job preempted because dispatch or elastic regrowth reclaimed its revocable
+# lease (repro.cluster.replay). Kept as a separate ledger key so the
+# injected incidence model and the scheduling policy reconcile side by side
+# in ``lost_gpu_hours_by_class``.
+QUOTA_RECLAIM = "quota_reclaim"
+
 # job types eligible for periodic checkpointing (the paper's asynchronous
 # checkpoint subsystem, §6.1 design 1, targets long pretraining-class jobs;
 # short eval/debug jobs restart from scratch)

@@ -30,8 +30,9 @@ replay from ~30 s under 15 s). Event kinds:
 the epoch, so a stale end-event popped later is simply discarded
 (lazy deletion) instead of paying O(n) heap surgery.
 
-Waiting jobs live in two ``deque``-backed FIFO classes (reservation-priority
-and best-effort), so dispatch is O(1) per started job.
+Waiting jobs live in ``deque``-backed FIFO classes (reservation-priority,
+spare-pool, and the revocable best-effort lease tier), so dispatch is O(1)
+per started job.
 
 Failure handling per injected event (class ``hardware``/``infra``/
 ``preemption``):
@@ -111,6 +112,38 @@ the two §6 systems:
   reports the realized p50/p95/p99 and the shadow-estimate error tail,
   quantifying how much the EASY estimate (which cannot see future
   failures/repairs) misses by at Seren scale.
+
+Node-local revocable leases
+---------------------------
+Two extensions turn the ledger's leases from *node-less capacity* into
+node-local, policy-revocable allocations:
+
+* **Placement** (``placement=True``): a :class:`NodeLedger` mirrors every
+  capacity movement onto the ``SimulatedFleet``'s node ids — job
+  allocations pack best-fit onto concrete nodes, elastic shrinks drain the
+  *job's own* faulty node, and borrowed trial shards land on nodes with
+  genuinely idle GPUs. Each borrowed shard's model load then contends for
+  that node's §6.2 storage NIC (``ClusterSpec.load_minutes_shared``), so
+  the Fig. 16 load collapse appears inside the replay
+  (``summary()["placement"]``), not just in ``evalsched``'s standalone
+  simulator.
+* **Best-effort tier** (jobs with ``JobRecord.best_effort``): checkpointed
+  low-priority jobs start on *revocable leases* over any idle capacity —
+  including the pretraining reservation's unused quota. The instant queue
+  dispatch or a shrunken job's regrowth wants the GPUs, the newest leases
+  are revoked: the job rolls back to its last periodic checkpoint, pays
+  ``revoke_overhead_min`` and requeues at the back of its tier — the
+  paper's §3.2 quota-reclamation preemption reproduced as a *scheduling
+  policy* (ledger key ``quota_reclaim``) instead of an injected failure
+  class, with accounting identical to an injected ``preemption``.
+  Ordering within one capacity event is fixed and regression-pinned:
+  queue dispatch (revoking as needed) → backfill → regrowth (revocation
+  *lands before* the grow reads the free pools, so the same GPUs are never
+  double-counted) → new best-effort leases → trial-borrower reconcile.
+
+Regrowth additionally charges an explicit re-shard stall
+(``reshard_cost_min``) when a shrunken job changes width — previously that
+cost was folded into (i.e. hidden by) the nominal-minute stretch.
 """
 from __future__ import annotations
 
@@ -125,9 +158,11 @@ from typing import Optional, Union
 
 import numpy as np
 
-from repro.cluster.analysis import head_delay_stats, pool_stats
+from repro.cluster.analysis import (head_delay_stats, placement_stats,
+                                    pool_stats)
 from repro.cluster.failures import (CHECKPOINTED_TYPES, PREEMPTION,
-                                    FailureInjector, ReplayFailureClass,
+                                    QUOTA_RECLAIM, FailureInjector,
+                                    ReplayFailureClass,
                                     synthesize_failure_log)
 from repro.cluster.scheduler import (HIGH_PRIORITY, NEVER_STARTED,
                                      ReservationScheduler)
@@ -193,6 +228,224 @@ class DiagnosisLoop:
         return len(self._cache)
 
 
+class NodeLedger:
+    """Per-node free-GPU accounting behind the elastic capacity pool.
+
+    Mirrors every capacity movement of the ``ReservationScheduler`` onto
+    the ``SimulatedFleet``'s node ids, so leases become *node-local*:
+    ``free_total()`` always equals the scheduler's summed free pools (the
+    quota split is the scheduler's dimension; this ledger tracks the
+    physical one). Placement policy: wide jobs take whole idle nodes
+    first, the remainder best-fits into the smallest covering fragment —
+    packing keeps fragmentation (and thus the per-node NIC contention
+    borrowed shards see) realistic.
+
+    Free capacity that cannot be attributed to a healthy node — the
+    cluster-size remainder, or GPUs returned by a job whose node was
+    drained under it — lives in the *unplaced* overflow pool. Jobs may
+    draw it as a last resort (pseudo node id ``-1``); borrowed trial
+    shards never do (a shard needs a concrete node NIC to load over).
+
+    ``dirty`` collects nodes whose free count *decreased* since the
+    borrower last reconciled, so node-local lease revocation is O(changed
+    nodes), not O(fleet), per capacity event.
+    """
+
+    __slots__ = ("n_nodes", "node_gpus", "free", "used", "cordoned",
+                 "float_free", "dirty", "_buckets")
+
+    def __init__(self, n_nodes: int, node_gpus: int, total_gpus: int):
+        self.n_nodes = n_nodes
+        self.node_gpus = min(node_gpus, total_gpus)
+        self.free = [self.node_gpus] * n_nodes
+        self.used = [0] * n_nodes
+        self.cordoned: set = set()
+        self.float_free = total_gpus - n_nodes * self.node_gpus
+        self.dirty: set = set()
+        self._buckets: list = [set() for _ in range(self.node_gpus + 1)]
+        self._buckets[self.node_gpus].update(range(n_nodes))
+
+    def free_total(self) -> int:
+        """Summed free GPUs (invariant: == scheduler free; test hook)."""
+        return sum(self.free) + self.float_free
+
+    def _set_free(self, n: int, new: int) -> None:
+        old = self.free[n]
+        if n not in self.cordoned:
+            self._buckets[old].discard(n)
+            self._buckets[new].add(n)
+        self.free[n] = new
+        if new < old:
+            self.dirty.add(n)
+
+    # -- job allocation -----------------------------------------------------
+
+    def _best_bucket(self, g: int) -> int:
+        """Smallest fragment covering ``g``, else the largest nonempty."""
+        lo = min(g, self.node_gpus)
+        for b in range(lo, self.node_gpus + 1):
+            if self._buckets[b]:
+                return b
+        for b in range(lo - 1, 0, -1):
+            if self._buckets[b]:
+                return b
+        return 0
+
+    def alloc(self, gpus: int) -> dict:
+        """Place ``gpus`` onto concrete nodes; returns ``{node: count}``."""
+        out: dict = {}
+        g = gpus
+        cap = self.node_gpus
+        buckets = self._buckets
+        free = self.free
+        used = self.used
+        dirty = self.dirty
+        whole = buckets[cap]
+        if g >= cap and whole:
+            empty = buckets[0]
+            while g >= cap and whole:
+                n = whole.pop()
+                free[n] = 0
+                used[n] = cap
+                dirty.add(n)
+                empty.add(n)
+                out[n] = cap
+                g -= cap
+        while g > 0:
+            b = self._best_bucket(g)
+            if b == 0:
+                break
+            bucket = buckets[b]
+            n = next(iter(bucket))
+            k = b if b < g else g
+            used[n] += k
+            bucket.discard(n)
+            buckets[b - k].add(n)
+            free[n] = b - k
+            dirty.add(n)
+            out[n] = out.get(n, 0) + k
+            g -= k
+        if g > 0:
+            if g > self.float_free:
+                raise RuntimeError("NodeLedger.alloc out of sync with the "
+                                   "scheduler free pools")
+            self.float_free -= g
+            out[-1] = out.get(-1, 0) + g
+        return out
+
+    def release(self, nodes: Optional[dict]) -> None:
+        """Return a finished/revoked/requeued job's GPUs to the free pool.
+        GPUs on a node drained while the job kept running, and unplaced
+        GPUs, return through the overflow pool."""
+        if not nodes:
+            return
+        buckets = self._buckets
+        free = self.free
+        cordoned = self.cordoned
+        for n, k in nodes.items():
+            if n < 0:
+                self.float_free += k
+            elif cordoned and n in cordoned:
+                self.used[n] -= k
+                self.float_free += k
+            else:
+                self.used[n] -= k
+                old = free[n]
+                buckets[old].discard(n)
+                buckets[old + k].add(n)
+                free[n] = old + k
+
+    # -- elastic shrink / regrow at the lender's repair ---------------------
+
+    def detach(self, nodes: dict, node: int) -> int:
+        """Elastic shrink: the job's GPUs on ``node`` leave the cluster
+        with the cordoned node (they were never free). Returns the count
+        detached."""
+        k = nodes.pop(node, 0)
+        if k and node >= 0:
+            self.used[node] -= k
+        return k
+
+    def attach(self, nodes: Optional[dict], repaired, give: int) -> None:
+        """Inverse of :meth:`detach` at the lender's REPAIR: ``give`` GPUs
+        rejoin the lender's allocation on the repaired node(s)."""
+        if nodes is None:
+            return
+        for n in repaired:
+            if give <= 0:
+                return
+            room = self.node_gpus - self.free[n] - self.used[n]
+            k = min(give, room)
+            if k > 0:
+                self.used[n] += k
+                nodes[n] = nodes.get(n, 0) + k
+                give -= k
+        if give > 0:            # defensively: headroom vanished, hold as
+            nodes[-1] = nodes.get(-1, 0) + give     # unplaced allocation
+
+    # -- cordon / repair ----------------------------------------------------
+
+    def cordon_node(self, node: int) -> int:
+        """Drain ``node``: its free GPUs leave the pools (handed back via
+        :meth:`repair_nodes` + :meth:`add_free`) and the node stops being
+        a placement or lease target. Returns the free GPUs drained."""
+        if node < 0 or node in self.cordoned:
+            return 0
+        self.cordoned.add(node)
+        k = self.free[node]
+        self._buckets[k].discard(node)
+        self.free[node] = 0
+        if k:
+            self.dirty.add(node)
+        return k
+
+    def repair_nodes(self, nodes) -> None:
+        for n in nodes:
+            if n in self.cordoned:
+                self.cordoned.discard(n)
+                self._buckets[self.free[n]].add(n)
+
+    def add_free(self, amount: int, prefer=()) -> None:
+        """Return drained GPUs to the free pool, preferring the repaired
+        node(s) up to their physical headroom; overflow is unplaced."""
+        for n in prefer:
+            if amount <= 0:
+                return
+            if n < 0 or n in self.cordoned:
+                continue
+            room = self.node_gpus - self.free[n] - self.used[n]
+            k = min(room, amount)
+            if k > 0:
+                self._set_free(n, self.free[n] + k)
+                amount -= k
+        if amount > 0:
+            self.float_free += amount
+
+    # -- borrowed-lease placement (TrialBorrower) ---------------------------
+
+    def lease_node(self, leases: dict) -> int:
+        """Node for a new 1-GPU borrowed lease: best-fit packing — the
+        smallest free fragment with lease headroom left, topped-up nodes
+        first. Same philosophy as job allocation (keep whole nodes free
+        for real jobs), and the source of the §6.2 reality the paper
+        stress-tested: a burst of trial shards piles onto one node's
+        storage NIC and their loads collapse (Fig. 16). Returns -1 when
+        only unplaced capacity is left."""
+        best, best_h = -1, 0
+        for b in range(1, self.node_gpus + 1):
+            for n in self._buckets[b]:
+                h = b - leases.get(n, 0)
+                if h <= 0:
+                    continue
+                if h == 1:          # one slot left: finishes packing a node
+                    return n
+                if best < 0 or h < best_h:
+                    best, best_h = n, h
+            if best >= 0:
+                return best         # smallest-fragment bucket had headroom
+        return best
+
+
 @dataclasses.dataclass
 class ReplayConfig:
     injector: Optional[FailureInjector] = None   # None = pure queue replay
@@ -222,6 +475,20 @@ class ReplayConfig:
     head_delay_sample: int = 64                   # shadow-estimate sampling
     #                                               (every Nth head; 0 = off;
     #                                                EASY samples every head)
+    # -- node-local revocable leases ----------------------------------------
+    placement: bool = False                       # NodeLedger on SimulatedFleet
+    #                                               ids: jobs/leases land on
+    #                                               concrete nodes, borrowed
+    #                                               shards pay NIC-contended
+    #                                               model loads
+    reshard_cost_min: float = 0.0                 # explicit regrow re-shard
+    #                                               stall (pool + repair
+    #                                               regrows), replacing the
+    #                                               implicit nominal-minute
+    #                                               folding
+    revoke_overhead_min: float = 2.0              # preempted best-effort
+    #                                               lease restart overhead
+    #                                               (PREEMPTION-class parity)
 
 
 @dataclasses.dataclass
@@ -258,9 +525,13 @@ class ReplayResult:
     # -- elastic capacity pool (free-GPU ledger) ----------------------------
     pool_regrows: int = 0            # opportunistic regrow events (free pool)
     pool_regrown_gpus: int = 0       # GPUs reclaimed across those events
+    pool_reshard_events: int = 0     # regrows that paid the re-shard stall
+    pool_reshard_min: float = 0.0    # summed explicit re-shard stall (wall)
     pool_free_gpu_min: float = 0.0   # time-integrated free (idle) capacity
     horizon_min: float = 0.0         # last event timestamp (ledger window)
     borrow: Optional[dict] = None    # TrialBorrower.stats() when borrowing
+    be_lease_starts: int = 0         # best-effort jobs started on leases
+    placement: Optional[dict] = None  # NodeLedger drain state (placement on)
     head_delays: list = dataclasses.field(default_factory=list)
     #   realized minutes each blocked FIFO head waited before starting
     shadow_errors: list = dataclasses.field(default_factory=list)
@@ -338,6 +609,7 @@ class ReplayResult:
             },
             "pool": pool_stats(self),
             "head_delay": head_delay_stats(self),
+            "placement": placement_stats(self),
         }
 
 
@@ -401,6 +673,7 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
         j._seg_start = 0.0
         j._head_since = None
         j._shadow_est = None
+        j._nodes = None
 
     # initial submissions are consumed through a cursor over the
     # time-sorted trace (stable sort == the old (submit, index) heap order,
@@ -413,7 +686,17 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
 
     wait_hi: collections.deque = collections.deque()
     wait_lo: collections.deque = collections.deque()
+    wait_be: collections.deque = collections.deque()   # revocable-lease tier
+    # running best-effort leases, insertion-ordered (dict: O(1) removal,
+    # reversed() gives the LIFO revocation order); the (reserved, spare)
+    # totals are maintained incrementally because the blocked-head probe
+    # consults them on every event of a saturated replay
+    be_running: dict = {}
+    be_r_total = be_s_total = 0
     hi_types = HIGH_PRIORITY
+    ledger: Optional[NodeLedger] = None
+    if cfg.placement:
+        ledger = NodeLedger(n_nodes, cfg.node_gpus, total_gpus)
     # (scheduled_end, job, epoch) for EASY shadow estimation; lazily pruned
     running_ends: list = []
     # -- elastic capacity pool state ----------------------------------------
@@ -423,6 +706,13 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
     shrunken: dict = {}
     regrow = cfg.opportunistic_regrow
     borrower = cfg.borrower
+    if borrower is None:
+        _reconcile = None
+    elif ledger is not None:
+        def _reconcile(now, free, _b=borrower, _l=ledger):
+            _b.reconcile(now, free, _l)
+    else:
+        _reconcile = borrower.reconcile
     head_sample = cfg.head_delay_sample
     # shadow estimation needs the running-ends ledger; maintain it whenever
     # EASY runs or head-delay sampling is on
@@ -449,9 +739,19 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
 
     ends_cap = 1 << 13
 
-    def start(job: JobRecord, now: float) -> None:
-        nonlocal seq, ends_cap
-        sched_start(job)
+    def start(job: JobRecord, now: float, lease: bool = False) -> None:
+        nonlocal seq, ends_cap, be_r_total, be_s_total
+        if lease:
+            sched.lease(job)
+            be_running[job.job_id] = job
+            _, lr, ls = job._alloc
+            be_r_total += lr
+            be_s_total += ls
+            result.be_lease_starts += 1
+        else:
+            sched_start(job)
+        if ledger is not None:
+            job._nodes = ledger.alloc(job.gpus)
         job._running = True
         job._width = w = job.gpus
         wait = now - job._arrived_at
@@ -513,11 +813,20 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
         if track_ends:
             running_ends.append((end, job, ep))
 
-    def sweep():
+    def sweep(prefer=None):
         """Hide the faulty node in the fleet, then locate it with the §6.1
-        two-round allgather sweep."""
-        candidates = [n for n in fleet.healthy_nodes()
-                      if n not in fleet.faulty]
+        two-round allgather sweep. With placement on, the fault lands on
+        one of the failing job's *own* nodes (``prefer``) — a hardware
+        fault physically lives where the job ran."""
+        if prefer:
+            candidates = [n for n in prefer
+                          if n >= 0 and n not in fleet.cordoned
+                          and n not in fleet.faulty]
+        else:
+            candidates = None
+        if not candidates:
+            candidates = [n for n in fleet.healthy_nodes()
+                          if n not in fleet.faulty]
         if candidates:
             fleet.fail({rng.choice(candidates)})
         det = two_round_detection(fleet.healthy_nodes(), fleet)
@@ -532,6 +841,105 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
         p.failures += 1
         p.lost_gpu_min += lost_gpu
         p.overhead_min += overhead
+
+    def stop_running(job: JobRecord) -> None:
+        """A running job leaves the cluster (finish/requeue/kill): free its
+        scheduler allocation, its ledger nodes, and its lease slot."""
+        nonlocal be_r_total, be_s_total
+        sched.finish(job)
+        job._running = False
+        kind, r, s = job._alloc
+        if kind == "be":
+            del be_running[job.job_id]
+            be_r_total -= r
+            be_s_total -= s
+        if ledger is not None:
+            ledger.release(job._nodes)
+            job._nodes = None
+
+    def revoke_lease(job: JobRecord, now: float) -> None:
+        """Quota reclamation: preempt a running best-effort lease. The job
+        rolls back to its last periodic checkpoint (best-effort jobs are
+        always checkpointed — that is what makes them safe to revoke),
+        pays ``revoke_overhead_min`` and requeues at the back of its tier.
+        The rollback/requeue accounting is identical to an injected
+        ``preemption`` failure (parity-tested); the incident lands in the
+        ``quota_reclaim`` class ledger so the emergent policy stays
+        separable from the injected class."""
+        nonlocal seq
+        w = job._width
+        progress = job._prog + max(0.0, now - job._seg_start) * w / job.gpus
+        if cfg.record_segments and now > job._seg_start:
+            result.segments.append(
+                (job.job_id, w, job._seg_start, now, "revoke"))
+        if interval > 0:
+            rollback = math.floor(progress / interval) * interval
+        else:
+            rollback = 0.0
+        lost_gpu = (progress - rollback) * job.gpus
+        job.lost_gpu_min += lost_gpu
+        job._done = rollback
+        job.restarts += 1
+        job._epoch += 1             # void the in-flight FINISH/FAIL event
+        stop_running(job)
+        cstats = result.by_class.setdefault(QUOTA_RECLAIM, ClassStats())
+        cstats.failures += 1
+        cstats.lost_gpu_min += lost_gpu
+        if job.restarts > cfg.max_restarts:
+            result.killed_job_ids.append(job.job_id)
+            return
+        cstats.overhead_min += cfg.revoke_overhead_min
+        heappush(events, (now + cfg.revoke_overhead_min, seq, ARRIVE, job))
+        seq += 1
+
+    def ensure_free(job: JobRecord, now: float) -> bool:
+        """Dispatch wants capacity a revocable lease holds: preempt
+        best-effort leases newest-first (LIFO) until ``job`` fits in the
+        pools its class may draw. Returns whether it now fits; revokes
+        nothing when the lease stack cannot cover the shortfall."""
+        if job.jtype in hi_types or job.gpus > spare:
+            if job.gpus > sched.free_reserved + sched.free_spare \
+                    + be_r_total + be_s_total:
+                return False
+            spare_only = False
+        else:
+            if job.gpus > sched.free_spare + be_s_total:
+                return False
+            spare_only = True
+        for j in reversed(list(be_running.values())):
+            if can_start(job):
+                break
+            if spare_only and j._alloc[2] == 0:
+                continue
+            revoke_lease(j, now)
+        return can_start(job)
+
+    def revoke_for_regrow(need: int, spare_only: bool, now: float) -> None:
+        """Regrowth wants ``need`` GPUs beyond the real free pools: revoke
+        best-effort leases newest-first until they are freed. Must run
+        *before* ``sched.grow`` reads the pools — revocation has to land
+        first or the same GPUs would be double-counted (ordering pinned by
+        the lease/regrow audit regression tests)."""
+        freed = 0
+        for j in reversed(list(be_running.values())):
+            if freed >= need:
+                break
+            if spare_only and j._alloc[2] == 0:
+                continue
+            freed += j._alloc[2] if spare_only else j._alloc[1] + j._alloc[2]
+            revoke_lease(j, now)
+
+    def lease_pass(now: float) -> None:
+        """Start waiting best-effort jobs (FIFO) on leftover free capacity.
+        Runs strictly after dispatch and regrowth — a lease only ever
+        consumes capacity nobody with priority wanted at this instant —
+        and before the trial borrower, which is the lowest tier."""
+        while wait_be:
+            j = wait_be[0]
+            if j.gpus > sched.free_reserved + sched.free_spare:
+                break
+            wait_be.popleft()
+            start(j, now, lease=True)
 
     def _fits(job: JobRecord, free_r: int, free_s: int) -> bool:
         """can_start against a hypothetical (reserved, spare) free split."""
@@ -550,8 +958,16 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
         running_ends[:] = live                  # prune lazy-deleted entries
         live.sort(key=lambda e: e[0])
         free_r, free_s = sched.free_reserved, sched.free_spare
+        if be_running:
+            # revocable leases are free capacity *for the head* — dispatch
+            # preempts them on demand, so the estimate must not wait for
+            # their scheduled ends (their allocs are skipped below)
+            free_r += be_r_total
+            free_s += be_s_total
         for t, j, _ in live:
-            _, r, s = j._alloc
+            kind, r, s = j._alloc
+            if kind == "be":
+                continue
             free_r += r
             free_s += s
             if _fits(head, free_r, free_s):
@@ -601,15 +1017,28 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
         EASY only when the regrown job's compressed completion still lands
         before every waiting head's shadow time — the same exchange
         argument that keeps EASY backfill head-safe (the granted GPUs are
-        all returned at the job's completion, before the shadow instant)."""
+        all returned at the job's completion, before the shadow instant).
+
+        Regrowth outranks best-effort leases: the admitted width may be
+        covered by revoking leases (newest-first), and the revocation must
+        *land* before ``sched.grow`` reads the pools — granting and
+        revoking against one snapshot would double-count the leased GPUs
+        (the capacity-event ordering audit; regression-pinned). The width
+        change pays the explicit ``reshard_cost_min`` stall."""
+        nonlocal be_r_total, be_s_total
+        reshard = cfg.reshard_cost_min
         for jid in list(shrunken):
             job = shrunken[jid]
             if not job._running or job._width >= job.gpus:
                 del shrunken[jid]
                 continue
             kind = job._alloc[0]
-            avail = sched.free_reserved + sched.free_spare \
-                if kind == "hi" else sched.free_spare
+            free_now = sched.free_spare if kind == "lo" \
+                else sched.free_reserved + sched.free_spare
+            avail = free_now
+            if be_running and kind != "be":
+                avail += be_s_total if kind == "lo" \
+                    else be_r_total + be_s_total
             k = min(job.gpus - job._width, avail)
             if k <= 0:
                 continue
@@ -621,7 +1050,7 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
                 t_base = job._seg_start
                 prog = job._prog
             if easy and (wait_hi or wait_lo):
-                new_end = t_base \
+                new_end = t_base + reshard \
                     + (job.duration_min - prog) * job.gpus / (w + k)
                 ok = True
                 for q in (wait_hi, wait_lo):
@@ -630,16 +1059,30 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
                         break
                 if not ok:
                     continue
+            if k > free_now:
+                revoke_for_regrow(k - free_now, kind == "lo", now)
             take_r, take_s = sched.grow(job, k)
             got = take_r + take_s
             if got <= 0:
                 continue
+            if kind == "be":
+                be_r_total += take_r
+                be_s_total += take_s
+            if ledger is not None:
+                for n, c in ledger.alloc(got).items():
+                    job._nodes[n] = job._nodes.get(n, 0) + c
             if now > job._seg_start:
                 if cfg.record_segments:
                     result.segments.append(
                         (job.job_id, w, job._seg_start, now, "resize"))
                 job._prog = prog
                 job._seg_start = now
+            if reshard > 0.0:
+                # explicit re-shard stall: the job re-partitions onto its
+                # new width before computing again
+                job._seg_start += reshard
+                result.pool_reshard_events += 1
+                result.pool_reshard_min += reshard
             job._width = w + got
             result.pool_regrows += 1
             result.pool_regrown_gpus += got
@@ -662,7 +1105,9 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
         while wait_hi:
             j = wait_hi[0]
             if j.gpus > free_r + free_s:      # hi class draws both pools
-                break
+                # the head may still fit by reclaiming revocable leases
+                if not (be_running and ensure_free(j, now)):
+                    break
             wait_hi.popleft()
             start(j, now)
             free_r = sched.free_reserved
@@ -671,7 +1116,8 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
             j = wait_lo[0]
             g = j.gpus
             if (g > free_s) if g <= spare else (g > free_r + free_s):
-                break                          # lo class: spare pool only,
+                if not (be_running and ensure_free(j, now)):
+                    break                      # lo class: spare pool only,
             wait_lo.popleft()                  # unless wider than the pool
             start(j, now)
             free_r = sched.free_reserved
@@ -682,10 +1128,14 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
             if wait_lo:
                 backfill_scan(wait_lo, now)
         if regrow and shrunken \
-                and sched.free_reserved + sched.free_spare > 0:
+                and (be_running
+                     or sched.free_reserved + sched.free_spare > 0):
             # two-int guard: under the saturated bench configurations the
             # pools are usually dry, so skip the shrunken scan entirely
+            # (revocable leases count as reclaimable capacity)
             regrow_pass(now)
+        if wait_be:
+            lease_pass(now)
         if head_sample:
             # inline the already-marked fast path: try_start runs per event
             # and the head usually opened its episode long ago
@@ -707,6 +1157,15 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
             # legacy mode: an impossible job wedges its FIFO class and
             # everything behind it surfaces as never-started at drain
         job._arrived_at = now
+        if job.best_effort:
+            # revocable-lease tier: strictly below both FIFO classes — a
+            # lease only ever starts on currently-free capacity (it never
+            # preempts anything itself), FIFO within the tier
+            if not wait_be and sched.can_lease(job):
+                start(job, now, lease=True)
+            else:
+                wait_be.append(job)
+            return
         q = wait_hi if job.jtype in hi_types else wait_lo
         # Dispatch invariant: between events, every non-empty wait queue has
         # a blocked head (try_start runs to quiescence after each
@@ -714,9 +1173,10 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
         # can enable at most *itself* — when its queue is empty, or when a
         # backfill policy admits it past the blocked head (greedy: it merely
         # fits; EASY: its completion must also land before the head's
-        # shadow time, so the head is never delayed).
+        # shadow time, so the head is never delayed). A blocked direct
+        # start may still reclaim revocable best-effort leases.
         if not q:
-            if can_start(job):
+            if can_start(job) or (be_running and ensure_free(job, now)):
                 start(job, now)
                 return
         elif len(q) < cfg.backfill_window and can_start(job) and (
@@ -731,14 +1191,17 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
     def on_fail(job: JobRecord, cls: ReplayFailureClass, now: float) -> bool:
         """Handle one injected failure; returns True iff pool capacity was
         freed (so the caller knows whether a dispatch pass is needed)."""
-        nonlocal seq
+        nonlocal seq, be_r_total, be_s_total
+        # the job's nodes before any release: aims the sweep (and outlives
+        # stop_running, which clears job._nodes)
+        job_nodes = list(job._nodes) if job._nodes else None
         # -- fold the failed segment & roll back to the last checkpoint ----
         w = job._width
         progress = job._prog + max(0.0, now - job._seg_start) * w / job.gpus
         if cfg.record_segments and now > job._seg_start:
             result.segments.append(
                 (job.job_id, w, job._seg_start, now, "fail"))
-        if job.jtype in ckpt_types and interval > 0:
+        if (job.jtype in ckpt_types or job.best_effort) and interval > 0:
             rollback = math.floor(progress / interval) * interval
         else:
             rollback = 0.0
@@ -784,14 +1247,34 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
         released = False
         if policy == POLICY_ELASTIC and not over_budget \
                 and len(fleet.cordoned) < max_cordoned:
-            det = sweep()
+            det = sweep(job_nodes)
             swept = True
-            k = cfg.node_gpus * len(det.faulty)
-            if det.faulty and k < w:
+            if ledger is None:
+                k = cfg.node_gpus * len(det.faulty)
+            else:
+                # placement: the job sheds exactly its GPUs on the faulty
+                # node(s) — the shrink width is physical, not nominal
+                k = sum(job._nodes.get(n, 0) for n in det.faulty) \
+                    if job._nodes else 0
+            if det.faulty and 0 < k < w:
                 fleet.cordon(det.faulty)
                 for n in det.faulty:
                     fleet.faulty.discard(n)
                 take_r, take_s = sched.release_partial(job, k)
+                if job._alloc[0] == "be":
+                    be_r_total -= take_r
+                    be_s_total -= take_s
+                cf_r = cf_s = 0
+                if ledger is not None:
+                    # the node drains entirely: the job's GPUs leave with
+                    # it, and so do its still-free GPUs (other jobs on the
+                    # node keep running until their own completion)
+                    cfree = 0
+                    for n in det.faulty:
+                        ledger.detach(job._nodes, n)
+                        cfree += ledger.cordon_node(n)
+                    if cfree:
+                        cf_r, cf_s = sched.cordon(cfree)
                 job._width = w - k
                 shrunken[job.job_id] = job    # eligible for pool regrowth
                 result.cordon_events += len(det.faulty)
@@ -799,7 +1282,8 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
                 bump_policy(POLICY_ELASTIC, cstats, lost_gpu,
                             cls.restart_overhead_min)
                 heappush(events, (now + max(cls.repair_min, 1e-9), seq,
-                                  REPAIR, (det.faulty, take_r, take_s, job)))
+                                  REPAIR, (det.faulty, take_r, take_s, job,
+                                           cf_r, cf_s)))
                 seq += 1
                 # resume from the checkpoint on the surviving nodes once
                 # re-init is paid; the remaining runtime stretches by
@@ -807,21 +1291,25 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
                 job._prog = rollback
                 job._seg_start = now + cls.restart_overhead_min
                 schedule_end(job)
-                return False
+                return cf_r + cf_s > 0
             if det.faulty:
                 # node located, but the job is too narrow to shed it: free
                 # the job first so the pool cordon can absorb its GPUs,
                 # then fall through to the requeue path
-                sched.finish(job)
-                job._running = False
+                stop_running(job)
                 released = True
                 fleet.cordon(det.faulty)
                 for n in det.faulty:
                     fleet.faulty.discard(n)
-                take_r, take_s = sched.cordon(k)
+                if ledger is None:
+                    take_r, take_s = sched.cordon(k)
+                else:
+                    cfree = sum(ledger.cordon_node(n) for n in det.faulty)
+                    take_r, take_s = sched.cordon(cfree)
                 result.cordon_events += len(det.faulty)
                 heappush(events, (now + max(cls.repair_min, 1e-9), seq,
-                                  REPAIR, (det.faulty, take_r, take_s, None)))
+                                  REPAIR, (det.faulty, take_r, take_s, None,
+                                           0, 0)))
                 seq += 1
             policy = POLICY_REQUEUE
 
@@ -836,18 +1324,25 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
 
         # -- requeue (and the kill path for every policy) ------------------
         if not released:
-            sched.finish(job)
-            job._running = False
+            stop_running(job)
         if node_fault and not swept and len(fleet.cordoned) < max_cordoned:
-            det = sweep()
+            det = sweep(job_nodes)
             if det.faulty:
                 fleet.cordon(det.faulty)
                 for n in det.faulty:
                     fleet.faulty.discard(n)
-                take_r, take_s = sched.cordon(cfg.node_gpus * len(det.faulty))
+                if ledger is None:
+                    take_r, take_s = sched.cordon(
+                        cfg.node_gpus * len(det.faulty))
+                else:
+                    # the job's GPUs already returned to its nodes via
+                    # stop_running, so the node drain sweeps them up
+                    cfree = sum(ledger.cordon_node(n) for n in det.faulty)
+                    take_r, take_s = sched.cordon(cfree)
                 result.cordon_events += len(det.faulty)
                 heappush(events, (now + max(cls.repair_min, 1e-9), seq,
-                                  REPAIR, (det.faulty, take_r, take_s, None)))
+                                  REPAIR, (det.faulty, take_r, take_s, None,
+                                           0, 0)))
                 seq += 1
         if over_budget:
             result.killed_job_ids.append(job.job_id)
@@ -860,17 +1355,28 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
         return True
 
     def on_repair(payload, now: float) -> None:
-        nodes, take_r, take_s, lender = payload
+        nonlocal be_r_total, be_s_total
+        nodes, take_r, take_s, lender, cf_r, cf_s = payload
         fleet.repair(nodes)
+        if ledger is not None:
+            ledger.repair_nodes(nodes)
         if lender is not None and lender._running \
                 and lender._width < lender.gpus:
             # the node's GPUs go straight back to the elastic job that lent
-            # them; any excess (the job already regrew) rejoins the pools
+            # them; any excess (the job already regrew) rejoins the pools,
+            # as do the free GPUs drained with the node's cordon (cf_*)
             give = min(lender.gpus - lender._width, take_r + take_s)
             give_r = min(give, take_r)
             give_s = give - give_r
             sched.reacquire(lender, give_r, give_s)
-            sched.uncordon(take_r - give_r, take_s - give_s)
+            if lender._alloc[0] == "be":
+                be_r_total += give_r
+                be_s_total += give_s
+            sched.uncordon(take_r - give_r + cf_r, take_s - give_s + cf_s)
+            if ledger is not None:
+                ledger.attach(lender._nodes, nodes, give)
+                ledger.add_free(take_r + take_s - give + cf_r + cf_s,
+                                prefer=nodes)
             if now > lender._seg_start:
                 if cfg.record_segments:
                     result.segments.append(
@@ -879,11 +1385,19 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
                 lender._prog += (now - lender._seg_start) \
                     * lender._width / lender.gpus
                 lender._seg_start = now
+            if cfg.reshard_cost_min > 0.0:
+                # the width change at the repair pays the same explicit
+                # re-shard stall as a pool regrow
+                lender._seg_start += cfg.reshard_cost_min
+                result.pool_reshard_events += 1
+                result.pool_reshard_min += cfg.reshard_cost_min
             lender._width += give
             result.elastic_regrows += 1
             schedule_end(lender)
         else:
-            sched.uncordon(take_r, take_s)
+            sched.uncordon(take_r + cf_r, take_s + cf_s)
+            if ledger is not None:
+                ledger.add_free(take_r + take_s + cf_r + cf_s, prefer=nodes)
 
     processed = 0
     ai, n_arr = 0, len(arrivals)
@@ -904,10 +1418,9 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
                 pool_t = now
             processed += 1
             on_arrive(job, now)
-            if borrower is not None:
+            if _reconcile is not None:
                 # the arrival may have started and consumed leased capacity
-                borrower.reconcile(now, sched.free_reserved
-                                   + sched.free_spare)
+                _reconcile(now, sched.free_reserved + sched.free_spare)
             continue
         if not events:
             break
@@ -922,8 +1435,7 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
                 result.stale_events += 1
                 continue
             processed += 1
-            sched.finish(job)
-            job._running = False
+            stop_running(job)
             if cfg.record_segments:
                 result.segments.append(
                     (job.job_id, job._width, job._seg_start, now, "finish"))
@@ -938,25 +1450,31 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
         elif kind == ARRIVE:
             processed += 1
             on_arrive(payload, now)
-            if borrower is not None:
-                borrower.reconcile(now, sched.free_reserved
-                                   + sched.free_spare)
+            if _reconcile is not None:
+                _reconcile(now, sched.free_reserved + sched.free_spare)
             continue
         else:  # REPAIR
             processed += 1
             on_repair(payload, now)
         try_start(now)
-        if borrower is not None:
-            borrower.reconcile(now, sched.free_reserved + sched.free_spare)
+        if _reconcile is not None:
+            _reconcile(now, sched.free_reserved + sched.free_spare)
 
     # jobs still waiting when the event stream drains never ran: give them
     # an unambiguous sentinel instead of the misleading default 0.0
-    for q in (wait_hi, wait_lo):
+    for q in (wait_hi, wait_lo, wait_be):
         for j in q:
             if not j._started:
                 j.queue_min = NEVER_STARTED
     result.events_processed = processed
     result.horizon_min = pool_t
+    if ledger is not None:
+        result.placement = {
+            "n_nodes": ledger.n_nodes,
+            "node_gpus": ledger.node_gpus,
+            "cordoned_nodes": len(ledger.cordoned),
+            "unplaced_free_gpus": ledger.float_free,
+        }
     if borrower is not None:
         borrower.close(pool_t)
         result.borrow = borrower.stats()

@@ -67,6 +67,26 @@ class ReservationScheduler:
         self.free_reserved += r
         self.free_spare += s
 
+    # -- revocable best-effort leases (§3.2 quota reclamation as policy) ----
+
+    def can_lease(self, job: JobRecord) -> bool:
+        """A revocable lease may draw *any* idle capacity — including the
+        pretraining reservation's unused quota — because it is reclaimed
+        the instant a queued job or a regrowing shrunken job wants it."""
+        return job.gpus <= self.free_reserved + self.free_spare
+
+    def lease(self, job: JobRecord) -> None:
+        """Start ``job`` on a revocable best-effort lease: spare pool
+        first, then idle reserved quota (the §3.2 reclamation target).
+        The allocation kind ``"be"`` marks it revocable; the GPUs come
+        back through the ordinary :meth:`finish` when the job completes
+        or the lease is revoked."""
+        take_s = min(job.gpus, self.free_spare)
+        take_r = job.gpus - take_s
+        self.free_spare -= take_s
+        self.free_reserved -= take_r
+        job._alloc = ("be", take_r, take_s)                 # type: ignore
+
     # -- cordon accounting (used by the failure-aware replay) ---------------
 
     def cordon(self, gpus: int) -> tuple[int, int]:
@@ -116,16 +136,24 @@ class ReservationScheduler:
         """Opportunistic elastic regrowth: grant up to ``gpus`` currently
         *free* GPUs to a running job's allocation (a shrunken job reclaiming
         width from the pool before its lender node repairs). Admission
-        follows the reservation policy: a job holding a reserved-quota
-        allocation draws reserved-then-spare; a best-effort allocation may
-        only grow from the spare pool, so regrowth can never eat into the
-        pretraining reservation. Returns the (reserved, spare) split
+        follows the reservation policy: a ``"hi"`` (reserved-quota)
+        allocation draws reserved-then-spare; a ``"lo"`` (spare-pool)
+        allocation may only grow from the spare pool, so regrowth can
+        never eat into the pretraining reservation; a ``"be"`` revocable
+        lease grows like it leased (spare first, then idle reserved —
+        still reclaimable on demand). Returns the (reserved, spare) split
         granted, which is folded into ``job._alloc`` and comes back to the
         pools through the ordinary :meth:`finish`."""
         kind, alloc_r, alloc_s = job._alloc              # type: ignore
         if kind == "hi":
             take_r = max(0, min(gpus, self.free_reserved))
             take_s = max(0, min(gpus - take_r, self.free_spare))
+        elif kind == "be":
+            # a revocable lease regrows like it leased: spare first, then
+            # idle reserved quota (still revocable, so it cannot hurt the
+            # reservation — the quota reclaims it on demand)
+            take_s = max(0, min(gpus, self.free_spare))
+            take_r = max(0, min(gpus - take_s, self.free_reserved))
         else:
             take_r = 0
             take_s = max(0, min(gpus, self.free_spare))

@@ -95,6 +95,13 @@ class JobRecord:
     restarts: int = 0            # injected-failure restarts
     lost_gpu_min: float = 0.0    # work rolled back to the last checkpoint
     requeue_wait_min: float = 0.0  # queueing after failures (excl. queue_min)
+    # submitted to the revocable-lease tier: the job runs on *any* idle
+    # capacity (including the pretraining reservation's unused quota), is
+    # always periodically checkpointed, and is preempted back to its last
+    # checkpoint the instant dispatch or elastic regrowth reclaims the
+    # lease — the paper's §3.2 quota-reclamation preemption as a
+    # scheduling policy (see repro.cluster.replay)
+    best_effort: bool = False
 
     @property
     def gpu_time(self) -> float:
@@ -137,10 +144,29 @@ def _sample_demand(t: TypeSpec, n: int, rng: np.random.Generator) -> np.ndarray:
     return np.clip(d, t.demand_min, t.demand_max)
 
 
+# job types eligible for the revocable-lease best-effort tier. Flagged jobs
+# are *demoted* below both FIFO classes in exchange for running on any idle
+# capacity, so eligibility is about tolerating revocation, not about the
+# class's normal priority: debug/other are short spare-pool work, and
+# sft/mllm — though reserved-quota classes when submitted normally — are
+# the checkpointed types whose progress survives a preemption. Evaluation
+# is excluded (its trials have the §6.2 borrowing path) and so is
+# pretraining (it holds the reservation the tier scavenges).
+BEST_EFFORT_TYPES = ("debug", "other", "sft", "mllm")
+
+
 def generate_jobs(spec: WorkloadSpec, *, seed: int = 0,
                   n_jobs: Optional[int] = None,
-                  horizon_min: float = SIX_MONTHS_MIN) -> list[JobRecord]:
-    """Draw the 6-month job population (submission via a diurnal Poisson)."""
+                  horizon_min: float = SIX_MONTHS_MIN,
+                  best_effort_frac: float = 0.0,
+                  best_effort_types: Optional[tuple] = None) -> list[JobRecord]:
+    """Draw the 6-month job population (submission via a diurnal Poisson).
+
+    ``best_effort_frac`` submits that fraction of eligible-type jobs
+    (``best_effort_types``, default :data:`BEST_EFFORT_TYPES`) to the
+    revocable-lease tier (``JobRecord.best_effort``). Flagging uses its own
+    RNG stream, so the generated population is bit-identical to
+    ``best_effort_frac=0`` in every other field."""
     rng = np.random.default_rng(seed)
     scales = _calibrate_scales(spec, np.random.default_rng(seed + 1))
     n_total = n_jobs or spec.n_gpu_jobs
@@ -181,4 +207,11 @@ def generate_jobs(spec: WorkloadSpec, *, seed: int = 0,
                                   str(status[i])))
             jid += 1
     jobs.sort(key=lambda j: j.submit_min)
+    if best_effort_frac > 0.0:
+        be_types = frozenset(best_effort_types if best_effort_types
+                             is not None else BEST_EFFORT_TYPES)
+        be_rng = np.random.default_rng((seed << 1) ^ 0xBE57)
+        for j in jobs:
+            if j.jtype in be_types and be_rng.random() < best_effort_frac:
+                j.best_effort = True
     return jobs

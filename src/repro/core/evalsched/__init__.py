@@ -1,14 +1,15 @@
 """Decoupled scheduling for evaluation (paper §6.2)."""
-from repro.core.evalsched.trial import (BorrowItem, ClusterSpec, EvalDataset,
-                                        WorkItem, plan_borrow_items,
-                                        plan_work_items, standard_suite)
+from repro.core.evalsched.trial import (STORAGE_SPEC, BorrowItem,
+                                        ClusterSpec, EvalDataset, WorkItem,
+                                        plan_borrow_items, plan_work_items,
+                                        standard_suite)
 from repro.core.evalsched.simulator import SimResult
 from repro.core.evalsched.coordinator import (TrialBorrower,
                                               schedule_baseline,
                                               schedule_decoupled)
 
 __all__ = [
-    "ClusterSpec", "EvalDataset", "WorkItem", "plan_work_items",
-    "standard_suite", "SimResult", "schedule_baseline", "schedule_decoupled",
-    "BorrowItem", "plan_borrow_items", "TrialBorrower",
+    "ClusterSpec", "STORAGE_SPEC", "EvalDataset", "WorkItem",
+    "plan_work_items", "standard_suite", "SimResult", "schedule_baseline",
+    "schedule_decoupled", "BorrowItem", "plan_borrow_items", "TrialBorrower",
 ]

@@ -204,6 +204,8 @@ class _Lease:
     t0: float                     # lease acquisition time
     t_fold: float                 # progress folded up to here
     done_at: float                # scheduled completion of the current item
+    node: int = -1                # concrete NodeLedger node (placement mode)
+    load_end: float = 0.0         # model load finishes (NIC contention span)
 
 
 class TrialBorrower:
@@ -213,14 +215,23 @@ class TrialBorrower:
     The replay engine drives this object through two calls (the borrower
     protocol expected by ``ReplayConfig.borrower``):
 
-      ``reconcile(now, free)``  called after every capacity event, with the
-          scheduler's current total free GPUs. The borrower folds lease
-          progress (shards that finished chain into the next pending shard
-          in the same slot), *revokes* newest-first whenever its lease count
-          exceeds ``free`` — leases are strictly lower priority than every
-          queued job and every regrowing shrunken job — and leases
-          additional free GPUs (one shard each, up to ``max_leases``) when
-          capacity is idle. Returns the number of active leases.
+      ``reconcile(now, free, nodes=None)``  called after every capacity
+          event, with the scheduler's current total free GPUs. The borrower
+          folds lease progress (shards that finished chain into the next
+          pending shard in the same slot), *revokes* newest-first whenever
+          its lease count exceeds ``free`` — leases are strictly lower
+          priority than every queued job, every regrowing shrunken job and
+          every best-effort lease — and leases additional free GPUs (one
+          shard each, up to ``max_leases``) when capacity is idle. Returns
+          the number of active leases. With ``ReplayConfig.placement`` the
+          engine passes its ``NodeLedger`` as ``nodes``: each lease then
+          lands on a concrete node with genuinely idle GPUs, the shard's
+          model load pays that node's shared storage-NIC time
+          (``ClusterSpec.load_minutes_shared`` over the loads concurrently
+          in flight there — the Fig. 16 collapse, snapshot-priced at
+          acquisition), and leases on nodes whose free count dropped are
+          revoked node-locally (newest-first) even when total free
+          capacity still covers the lease count.
       ``close(now)``            end of replay: folds and releases all
           leases without counting preemptions.
 
@@ -228,8 +239,11 @@ class TrialBorrower:
     shard's completion time, so a reconcile pass is O(1) unless a
     completion or a revocation actually lands in the elapsed window. A
     preempted shard keeps its progress (decoupled trials dump outputs
-    incrementally) but pays ``restart_cost_min`` again on its next lease —
-    the §6.2 decomposed-trial restart cost.
+    incrementally) but pays ``restart_cost_min`` — plus the NIC-contended
+    reload in placement mode — again on its next lease, the §6.2
+    decomposed-trial restart cost. A shard chaining into the next pending
+    one on the *same* leased GPU pays no reload: the model is already
+    resident in node shared memory (the decoupled precursor design).
 
     Invariant (property-tested): ``borrowed_gpu_min`` equals the summed
     per-shard consumption ``work_min + overhead_min - remaining_min``
@@ -237,17 +251,23 @@ class TrialBorrower:
     """
 
     def __init__(self, items: list, *, restart_cost_min: float = 0.5,
-                 max_leases: int = 32, record_leases: bool = False):
+                 max_leases: int = 32, record_leases: bool = False,
+                 spec: Optional[ClusterSpec] = None):
         self.pending: collections.deque = collections.deque(items)
         self.items: tuple = tuple(items)
         self.restart_cost_min = restart_cost_min
         self.max_leases = max_leases
+        self.spec = spec              # storage model for node-local loads
         self.active: list[_Lease] = []
         self.completed: list[str] = []
         self.borrowed_gpu_min = 0.0   # GPU-minutes held (always working)
         self.overhead_min = 0.0       # (re)start cost charged across leases
         self.lease_count = 0
         self.preemptions = 0
+        # placement mode: live lease cover per node + realized load-time
+        # bins keyed by NIC concurrency at acquisition (the Fig. 16 curve)
+        self.leases_by_node: dict = {}
+        self.load_bins: dict = {}
         # (t_lease, t_release) spans, 1 GPU each, for conservation tests
         self.lease_records: Optional[list] = [] if record_leases else None
         self._min_done = math.inf
@@ -265,25 +285,55 @@ class TrialBorrower:
 
     # -- internals ----------------------------------------------------------
 
-    def _charge(self, item: BorrowItem) -> None:
+    def _charge(self, item: BorrowItem, extra: float = 0.0) -> None:
         """One lease acquisition: charge the decomposed-trial (re)start
-        cost and bump the lease counters (kept in one place so the
-        borrowed == work + overhead - remaining invariant has a single
+        cost — plus ``extra`` NIC-contended model-load minutes in
+        placement mode — and bump the lease counters (kept in one place so
+        the borrowed == work + overhead - remaining invariant has a single
         accounting site)."""
-        c = self.restart_cost_min
+        c = self.restart_cost_min + extra
         item.remaining_min += c
         item.overhead_min += c
         item.leases += 1
         self.overhead_min += c
         self.lease_count += 1
 
-    def _lease(self, now: float) -> None:
+    def _drop_node(self, lease: _Lease) -> None:
+        if lease.node >= 0:
+            left = self.leases_by_node[lease.node] - 1
+            if left:
+                self.leases_by_node[lease.node] = left
+            else:
+                del self.leases_by_node[lease.node]
+
+    def _lease(self, now: float, nodes=None) -> bool:
+        """Acquire one free GPU for the next pending shard; returns False
+        when placement found no concrete node to put it on."""
+        node = -1
+        load = 0.0
+        if nodes is not None:
+            node = nodes.lease_node(self.leases_by_node)
+            if node < 0:
+                return False           # only unplaced capacity is left
+            # snapshot-priced NIC share: loads already in flight on this
+            # node at acquisition (the §6.2 fair-share collapse; rates are
+            # not re-divided mid-load, unlike the evalsched Engine)
+            k = 1 + sum(1 for l in self.active
+                        if l.node == node and l.load_end > now + 1e-12)
+            if self.spec is not None:
+                load = self.spec.load_minutes_shared(k)
+            b = self.load_bins.setdefault(k, [0, 0.0])
+            b[0] += 1
+            b[1] += load
+            self.leases_by_node[node] = self.leases_by_node.get(node, 0) + 1
         item = self.pending.popleft()
-        self._charge(item)
-        lease = _Lease(item, now, now, now + item.remaining_min)
+        self._charge(item, load)
+        lease = _Lease(item, now, now, now + item.remaining_min, node,
+                       now + self.restart_cost_min + load)
         self.active.append(lease)
         if lease.done_at < self._min_done:
             self._min_done = lease.done_at
+        return True
 
     def _fold(self, lease: _Lease, now: float) -> bool:
         """Advance ``lease`` to ``now``, chaining completed shards into the
@@ -302,6 +352,7 @@ class TrialBorrower:
             self.completed.append(lease.item.name)
             if self.pending:
                 item = self.pending.popleft()
+                # same GPU, model already in node shm: no NIC reload
                 self._charge(item)
                 lease.item = item
                 lease.t0 = t_done        # new lease span, same GPU
@@ -310,34 +361,55 @@ class TrialBorrower:
                 continue
             if self.lease_records is not None:
                 self.lease_records.append((lease.t0, t_done))
+            self._drop_node(lease)
             return False
+
+    def _revoke(self, lease: _Lease, now: float) -> None:
+        """The pool reclaimed this lease's GPU (already popped from
+        ``active``): keep the shard's progress, requeue it first."""
+        if not self._fold(lease, now):
+            return                    # ran dry before the revocation landed
+        self.preemptions += 1
+        self.pending.appendleft(lease.item)
+        if self.lease_records is not None:
+            self.lease_records.append((lease.t0, now))
+        self._drop_node(lease)
 
     # -- the borrower protocol ---------------------------------------------
 
-    def reconcile(self, now: float, free: int) -> int:
+    def reconcile(self, now: float, free: int, nodes=None) -> int:
         active = self.active
         if active and now >= self._min_done - 1e-12:
             active = self.active = [l for l in active if self._fold(l, now)]
             self._min_done = min((l.done_at for l in active),
                                  default=math.inf)
-        n = len(active)
-        if n > free:
+        dropped = False
+        if len(active) > free:
             while len(active) > free:
-                lease = active.pop()
-                if not self._fold(lease, now):
-                    continue              # ran dry before the revocation
-                self.preemptions += 1
-                self.pending.appendleft(lease.item)
-                if self.lease_records is not None:
-                    self.lease_records.append((lease.t0, now))
-            n = len(active)
+                self._revoke(active.pop(), now)
+            dropped = True
+        if nodes is not None and nodes.dirty:
+            # node-local reclamation: a node whose free count fell below
+            # its lease cover revokes its newest leases — the global pass
+            # above cannot see *where* the capacity disappeared
+            if self.leases_by_node:
+                for nd in nodes.dirty:
+                    while self.leases_by_node.get(nd, 0) > nodes.free[nd]:
+                        i = next(i for i in range(len(active) - 1, -1, -1)
+                                 if active[i].node == nd)
+                        self._revoke(active.pop(i), now)
+                        dropped = True
+            nodes.dirty.clear()
+        if dropped:
             self._min_done = min((l.done_at for l in active),
                                  default=math.inf)
-        elif n < free and self.pending and n < self.max_leases:
+        n = len(active)
+        if n < free and self.pending and n < self.max_leases:
             take = min(free - n, self.max_leases - n, len(self.pending))
             for _ in range(take):
-                self._lease(now)
-            n += take
+                if not self._lease(now, nodes):
+                    break
+                n += 1
         return n
 
     def close(self, now: float) -> None:
@@ -348,12 +420,13 @@ class TrialBorrower:
                 self.pending.appendleft(lease.item)
                 if self.lease_records is not None:
                     self.lease_records.append((lease.t0, now))
+                self._drop_node(lease)
         self.active = []
         self._min_done = math.inf
 
     def stats(self) -> dict:
         """JSON-ready borrowing stats for ``ReplayResult.summary()``."""
-        return {
+        out = {
             "borrowed_gpu_min": self.borrowed_gpu_min,
             "borrowed_gpu_hours": self.borrowed_gpu_min / 60.0,
             "leases": self.lease_count,
@@ -362,6 +435,17 @@ class TrialBorrower:
             "shards_completed": len(self.completed),
             "shards_pending": len(self.pending) + len(self.active),
         }
+        if self.load_bins:
+            # realized NIC-contended load minutes per concurrency level —
+            # the Fig. 16 collapse curve, consumed by
+            # ``repro.cluster.analysis.placement_stats``
+            out["placement"] = {
+                "load_by_concurrency": {
+                    k: {"n": b[0], "mean_load_min": b[1] / b[0]}
+                    for k, b in sorted(self.load_bins.items())},
+                "max_concurrency": max(self.load_bins),
+            }
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -61,6 +61,13 @@ class ClusterSpec:
         return self.model_bytes * 8 / (self.pcie_gbps * 1e9) / 60.0
 
 
+# The canonical storage-model-only spec for ``TrialBorrower``: the borrower
+# prices NIC-shared loads purely from a spec's storage rates
+# (``load_minutes_shared``); node *topology* comes from the replay engine's
+# ``NodeLedger``, so the node count here is irrelevant.
+STORAGE_SPEC = ClusterSpec(n_nodes=1)
+
+
 # ---------------------------------------------------------------------------
 # the 63-dataset suite (synthetic but shaped like the paper's: OpenCompass-
 # style mixture — a few code sets with long CPU tails, several large

@@ -1,11 +1,13 @@
 """CI perf-regression gate (benchmarks.check_regression): pass/fail logic
-over benchmark artifact JSON, tolerance handling, and missing-file rules."""
+over benchmark artifact JSON, tolerance handling, missing-file rules, and
+the consolidated BENCH_replay.json throughput-trajectory artifact."""
 import json
 import os
 
 import pytest
 
 from benchmarks.check_regression import DEFAULT_TOLERANCE, GATES, check, main
+from benchmarks.run import TRAJECTORY_BENCHES, write_trajectory
 
 
 def _write(dirp, bench, metrics):
@@ -89,3 +91,44 @@ def test_tolerance_is_configurable(tmp_path):
     _write_all(str(fresh), scale=0.70)
     assert check(str(fresh), str(base), tolerance=0.5) == []
     assert DEFAULT_TOLERANCE == pytest.approx(0.25)
+
+
+# --- consolidated BENCH_replay.json trajectory -------------------------------
+
+def test_trajectory_extends_baseline_history(tmp_path):
+    """A fresh run's gated events_per_calib values append one labeled
+    entry to the committed baseline's history; re-running with the same
+    label replaces that entry instead of duplicating it."""
+    fresh = tmp_path / "fresh"
+    baseline = tmp_path / "base" / "BENCH_replay.json"
+    os.makedirs(baseline.parent)
+    with open(baseline, "w") as f:
+        json.dump({"metric": "events_per_calib",
+                   "history": [{"label": "pr3", "replay": 0.7,
+                                "pool": 0.3, "evalsched": 1.8}]}, f)
+    _write_all(str(fresh))
+    doc = write_trajectory(str(fresh), str(baseline), label="pr4")
+    assert doc is not None
+    assert [e["label"] for e in doc["history"]] == ["pr3", "pr4"]
+    assert doc["history"][-1]["replay"] == pytest.approx(0.8)
+    assert doc["history"][-1]["pool"] == pytest.approx(0.4)
+    assert doc["history"][-1]["evalsched"] == pytest.approx(2.0)
+    out = os.path.join(str(fresh), "BENCH_replay.json")
+    assert os.path.exists(out)
+    # same label again (a re-run) replaces, never duplicates
+    _write(str(fresh), "pool", {"events_per_calib": 0.5})
+    doc = write_trajectory(str(fresh), str(baseline), label="pr4")
+    assert [e["label"] for e in doc["history"]] == ["pr3", "pr4"]
+    assert doc["history"][-1]["pool"] == pytest.approx(0.5)
+
+
+def test_trajectory_skipped_on_partial_run(tmp_path):
+    """--only runs (or a bench failure) must not write a trajectory entry
+    with holes: any missing gated artifact skips the consolidation."""
+    fresh = tmp_path / "fresh"
+    _write_all(str(fresh))
+    os.remove(os.path.join(str(fresh), "evalsched.json"))
+    assert write_trajectory(str(fresh), str(tmp_path / "none.json"),
+                            label="x") is None
+    assert not os.path.exists(os.path.join(str(fresh), "BENCH_replay.json"))
+    assert set(TRAJECTORY_BENCHES) == {"replay", "pool", "evalsched"}

@@ -1,19 +1,23 @@
 """Elastic capacity pool: opportunistic free-pool regrowth, evalsched trial
-borrowing, the EASY head-protection priority rule, and conservation of GPU
-capacity + total work across arbitrary shrink -> borrow -> preempt-return ->
-regrow cycles."""
+borrowing, the EASY head-protection priority rule, node-local placement
+(NodeLedger + Fig. 16 NIC-contended borrowed loads), the best-effort
+revocable-lease tier (§3.2 quota reclamation as policy), and conservation of
+GPU capacity + total work + checkpoint accounting across arbitrary
+shrink -> borrow -> preempt-return -> regrow and best-effort
+start -> revoke -> rollback -> requeue -> re-lease cycles."""
 import collections
+import math
 
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.cluster import (KALOS, FailureInjector, ReplayConfig,
-                           ReplayFailureClass, ReservationScheduler,
-                           generate_jobs, replay_trace)
-from repro.cluster.failures import HARDWARE
+from repro.cluster import (KALOS, QUOTA_RECLAIM, FailureInjector,
+                           NodeLedger, ReplayConfig, ReplayFailureClass,
+                           ReservationScheduler, generate_jobs, replay_trace)
+from repro.cluster.failures import HARDWARE, PREEMPTION
 from repro.cluster.workload import JobRecord
-from repro.core.evalsched import BorrowItem, TrialBorrower
+from repro.core.evalsched import BorrowItem, ClusterSpec, TrialBorrower
 
 
 class ScriptedInjector:
@@ -338,3 +342,335 @@ def test_pool_cycles_conserve_capacity_and_work(n, gpus, seed, rate):
     for j in jobs:
         assert j.queue_min >= 0 and j.requeue_wait_min >= 0
         assert j.lost_gpu_min >= 0
+
+
+# --- scheduler primitive: revocable leases -----------------------------------
+
+def test_lease_draws_spare_then_reserved_and_round_trips():
+    sched = ReservationScheduler(32, 0.5)              # 16 r / 16 s
+    be = JobRecord(0, "debug", 20, 0.0, 10.0, "completed", best_effort=True)
+    assert sched.can_lease(be)
+    sched.lease(be)
+    # spare first, then idle reserved quota — the §3.2 reclamation target
+    assert be._alloc == ("be", 4, 16)
+    assert (sched.free_reserved, sched.free_spare) == (12, 0)
+    # a "be" allocation regrows spare-first too (and may draw reserved)
+    assert sched.grow(be, 6) == (6, 0)
+    sched.finish(be)
+    assert (sched.free_reserved, sched.free_spare) == (16, 16)
+
+
+# --- the best-effort revocable-lease tier ------------------------------------
+
+def test_best_effort_leases_reserved_quota_and_dispatch_revokes():
+    """A checkpointed best-effort job runs on the pretraining reservation's
+    idle quota; the moment a pretrain job wants the GPUs the lease is
+    revoked — the pretrain job starts undelayed, the best-effort job rolls
+    back to its last 30-min checkpoint, requeues, and finishes later.
+    Every number in the timeline is hand-checkable."""
+    be = JobRecord(0, "debug", 16, 0.0, 100.0, "completed", best_effort=True)
+    hi = JobRecord(1, "pretrain", 16, 47.0, 10.0, "completed")
+    res = replay_trace([be, hi], 16, reserved_frac=1.0,
+                       config=ReplayConfig(record_segments=True))
+    # the lease started instantly on reserved quota
+    assert be.queue_min == pytest.approx(0.0)
+    assert res.be_lease_starts == 2            # initial lease + re-lease
+    # quota reclaimed at t=47: rollback to ckpt at 30, 17 min x 16 GPUs lost
+    assert hi.queue_min == pytest.approx(0.0)  # dispatch never delayed
+    assert be.restarts == 1
+    assert be.lost_gpu_min == pytest.approx(17.0 * 16)
+    assert be._done == pytest.approx(30.0)
+    reclaim = res.by_class[QUOTA_RECLAIM]
+    assert reclaim.failures == 1
+    assert reclaim.lost_gpu_min == pytest.approx(17.0 * 16)
+    assert reclaim.overhead_min == pytest.approx(2.0)
+    # requeued at 49, pretrain ends 57, re-leases then runs 70 more min
+    assert be.requeue_wait_min == pytest.approx(57.0 - 49.0)
+    segs_be = [s for s in res.segments if s[0] == 0]
+    assert segs_be[0] == (0, 16, 0.0, 47.0, "revoke")
+    assert segs_be[-1][3] == pytest.approx(57.0 + 70.0)
+    assert segs_be[-1][4] == "finish"
+    _assert_capacity_conserved(res.segments, 16)
+    _assert_work_identity([be, hi], res)
+    s = res.summary()["pool"]["best_effort"]
+    assert s == {"jobs": 1, "lease_starts": 2, "revocations": 1,
+                 "lost_gpu_hours": pytest.approx(17.0 * 16 / 60.0),
+                 "revoke_overhead_min": pytest.approx(2.0),
+                 "never_started": 0}
+
+
+def test_revocation_accounting_matches_injected_preemption():
+    """The emergent quota-reclamation preemption must charge exactly what
+    the injected ``preemption`` failure class charges: same rollback, same
+    lost GPU-time, same restart overhead and requeue timing."""
+    def preempt_cls():
+        return ReplayFailureClass(PREEMPTION, 1.0, {},
+                                  restart_overhead_min=2.0)
+
+    # world A: best-effort job revoked by an arriving pretrain job at t=47
+    be = JobRecord(0, "sft", 4, 0.0, 100.0, "completed", best_effort=True)
+    blocker_a = JobRecord(1, "pretrain", 8, 47.0, 500.0, "completed")
+    replay_trace([be, blocker_a], 8, reserved_frac=1.0,
+                 config=ReplayConfig())
+    # world B: identical job hit by an injected preemption at t=47
+    inj = JobRecord(0, "sft", 4, 0.0, 100.0, "completed")
+    blocker_b = JobRecord(1, "pretrain", 8, 47.0, 500.0, "completed")
+    res_b = replay_trace([inj, blocker_b], 8, reserved_frac=1.0,
+                         config=ReplayConfig(injector=ScriptedInjector(
+                             [(47.0, preempt_cls()), None, None])))
+    assert be.lost_gpu_min == pytest.approx(inj.lost_gpu_min)
+    assert be._done == pytest.approx(inj._done) == pytest.approx(30.0)
+    assert be.restarts == inj.restarts == 1
+    # both re-arrive at t=49 behind the 8-GPU blocker
+    assert be.requeue_wait_min == pytest.approx(inj.requeue_wait_min)
+    assert res_b.by_class[PREEMPTION].overhead_min == pytest.approx(2.0)
+
+
+def test_best_effort_killed_after_max_restarts():
+    be = JobRecord(0, "debug", 8, 0.0, 500.0, "completed", best_effort=True)
+    blockers = [JobRecord(i, "pretrain", 8, 40.0 * i, 5.0, "completed")
+                for i in range(1, 4)]
+    res = replay_trace([be] + blockers, 8, reserved_frac=1.0,
+                       config=ReplayConfig(max_restarts=2))
+    assert be.restarts == 3
+    assert res.killed_job_ids == [0]
+    reclaim = res.by_class[QUOTA_RECLAIM]
+    assert reclaim.failures == 3
+    # the killing revocation charges no restart overhead (nothing restarts)
+    assert reclaim.overhead_min == pytest.approx(2 * 2.0)
+
+
+# --- the lease/regrow capacity-event ordering audit --------------------------
+
+def test_regrow_revocation_lands_before_grow_reads_free_count():
+    """Ordering regression (the double-count audit): at B's completion the
+    shrunken job A wants 8 GPUs back but only 4 are free — the other 2 sit
+    under a best-effort lease. The regrow admission counts the revocable
+    capacity, the revocation *lands first*, and the grow then reads the
+    post-revocation pools: A regrows by exactly 6 (4 free + 2 revoked),
+    with no instant where allocations exceed the cluster."""
+    cls = _hw(overhead=5.0, repair=10_000.0)
+    a = JobRecord(0, "evaluation", 10, 0.0, 300.0, "completed")
+    b = JobRecord(1, "evaluation", 4, 0.0, 31.0, "completed")
+    d = JobRecord(2, "debug", 2, 1.0, 100.0, "completed", best_effort=True)
+    inj = ScriptedInjector([(4.0, cls)] + [None] * 8)
+    res = replay_trace([a, b, d], 16, reserved_frac=0.0,
+                       config=ReplayConfig(injector=inj, node_gpus=8,
+                                           recovery_policy="elastic",
+                                           max_cordon_frac=0.5,
+                                           record_segments=True))
+    assert res.elastic_shrinks == 1            # A: 10 -> 2 at t=4
+    assert d.queue_min == pytest.approx(0.0)   # lease started on idle GPUs
+    # at t=31: free=4, lease holds 2, A's deficit is 8 -> regrow admits 6
+    assert res.pool_regrows == 1
+    assert res.pool_regrown_gpus == 6
+    reclaim = res.by_class[QUOTA_RECLAIM]
+    assert reclaim.failures == 1               # D revoked by the regrow
+    # D ran 1..31 and checkpoints every 30: rollback to 30, zero loss
+    assert d.restarts == 1
+    assert d.lost_gpu_min == pytest.approx(0.0)
+    assert d._done == pytest.approx(30.0)
+    _assert_capacity_conserved(res.segments, 16)
+    _assert_work_identity([a, b, d], res)
+
+
+def test_dispatch_revocation_preserves_easy_head_start():
+    """The EASY-head variant of the ordering audit: a best-effort lease
+    takes the 4 GPUs freed at t=31 (the regrow was deferred to protect the
+    head), and at t=50 the head needs them back — the lease is revoked in
+    the same event and the head still starts exactly at its shadow time."""
+    jobs, inj = _easy_head_trace()
+    h = jobs[3]
+    d = JobRecord(4, "debug", 4, 32.0, 200.0, "completed", best_effort=True)
+    res = replay_trace(jobs + [d], 16, reserved_frac=0.0,
+                       config=ReplayConfig(injector=inj, node_gpus=4,
+                                           recovery_policy="elastic",
+                                           max_cordon_frac=0.5,
+                                           backfill="easy",
+                                           record_segments=True))
+    assert d.queue_min == pytest.approx(0.0)       # leased the deferred GPUs
+    assert h.queue_min == pytest.approx(45.0)      # head start unharmed
+    assert res.by_class[QUOTA_RECLAIM].failures >= 1
+    _assert_capacity_conserved(res.segments, 16)
+
+
+# --- explicit regrow re-shard penalty ----------------------------------------
+
+def test_regrow_charges_explicit_reshard_stall():
+    """Same hand-checked timeline as
+    test_shrunken_job_regrows_from_pool_at_completion_event, now with a
+    2-minute re-shard stall: the regrown segment starts 2 minutes later
+    and the completion shifts by exactly the stall."""
+    cls = _hw(overhead=5.0, repair=500.0)
+    a = JobRecord(0, "pretrain", 16, 0.0, 60.0, "completed")
+    b = JobRecord(1, "pretrain", 8, 0.0, 20.0, "completed")
+    inj = ScriptedInjector([(10.0, cls), None, None, None])
+    res = replay_trace([a, b], 32, reserved_frac=0.5,
+                       config=ReplayConfig(injector=inj, node_gpus=8,
+                                           recovery_policy="elastic",
+                                           max_cordon_frac=0.5,
+                                           reshard_cost_min=2.0,
+                                           checkpoint_interval_min=30.0,
+                                           record_segments=True))
+    assert res.pool_regrows == 1
+    assert res.pool_reshard_events == 1
+    assert res.pool_reshard_min == pytest.approx(2.0)
+    # without the stall A finishes at 77.5; the explicit penalty adds 2
+    seg_final = max(s for s in res.segments if s[0] == 0)
+    assert seg_final[3] == pytest.approx(79.5)
+    assert seg_final[4] == "finish"
+    s = res.summary()["pool"]["regrowth"]
+    assert s["reshard_events"] == 1
+    assert s["reshard_stall_min"] == pytest.approx(2.0)
+
+
+# --- node-local placement (NodeLedger + Fig. 16 borrowed-load collapse) ------
+
+def test_node_ledger_conserves_and_round_trips():
+    led = NodeLedger(4, 8, 32)
+    assert led.free_total() == 32
+    a = led.alloc(20)                  # 2 whole nodes + best-fit remainder
+    assert sum(a.values()) == 20 and led.free_total() == 12
+    assert sorted(a.values(), reverse=True)[:2] == [8, 8]
+    b = led.alloc(3)                   # packs into the existing fragment
+    assert sum(b.values()) == 3
+    assert set(b) & set(a)             # shares the partially-used node
+    # cordon a fully-free node: its GPUs drain
+    free_node = next(n for n in range(4) if led.free[n] == 8)
+    assert led.cordon_node(free_node) == 8
+    assert led.free_total() == 32 - 23 - 8
+    led.release(b)
+    led.release(a)
+    led.repair_nodes([free_node])
+    led.add_free(8, prefer=[free_node])
+    assert led.free_total() == 32
+    assert led.free == [8, 8, 8, 8]
+    assert not led.cordoned
+
+
+def test_node_ledger_detach_attach_cycle():
+    led = NodeLedger(2, 8, 16)
+    nodes = led.alloc(12)
+    donor = max(nodes, key=nodes.get)          # the fully-used node
+    k = nodes[donor]
+    assert led.detach(nodes, donor) == k       # GPUs leave with the cordon
+    assert led.cordon_node(donor) == 0         # nothing free on it
+    assert led.free_total() == 4
+    led.repair_nodes([donor])
+    led.attach(nodes, [donor], k)
+    assert nodes[donor] == k
+    led.release(nodes)
+    assert led.free_total() == 16
+
+
+def test_borrowed_loads_collapse_on_shared_node_nic():
+    """Deterministic Fig. 16 reproduction inside the replay: 8 shards
+    lease the 8 GPUs of one node nearly at once, so the k-th lease's model
+    load sees k-1 loads already sharing the 25 Gb/s storage NIC and pays
+    exactly ``load_minutes_shared(k)`` — the paper's load collapse."""
+    spec = ClusterSpec(n_nodes=1)
+    j0 = JobRecord(0, "evaluation", 1, 0.0, 0.05, "completed")
+    bor = TrialBorrower([BorrowItem(f"s{i}", 30.0) for i in range(8)],
+                        restart_cost_min=0.5, spec=spec)
+    res = replay_trace([j0], 8, reserved_frac=0.0,
+                       config=ReplayConfig(placement=True))
+    p = res.summary()["placement"]
+    assert p["n_nodes"] == 1             # ledger view, no load bins yet
+    assert "load_by_concurrency" not in p
+
+    res = replay_trace([j0], 8, reserved_frac=0.0,
+                       config=ReplayConfig(placement=True, borrower=bor))
+    p = res.summary()["placement"]
+    assert p["n_nodes"] == 1 and p["node_gpus"] == 8
+    bins = p["load_by_concurrency"]
+    assert [bins[str(k)]["n"] for k in range(1, 9)] == [1] * 8
+    for k in range(1, 9):
+        assert bins[str(k)]["mean_load_min"] == pytest.approx(
+            spec.load_minutes_shared(k))
+    assert p["max_load_concurrency"] == 8
+    # 25/8 Gb/s shared vs the 12 Gb/s single-stream ceiling: ~3.8x slower
+    assert p["load_collapse_x"] == pytest.approx(
+        spec.load_minutes_shared(8) / spec.load_minutes_shared(1))
+    assert p["load_collapse_x"] > 3.0
+    # the NIC-contended load is charged to the shard as lease overhead
+    assert bor.overhead_min == pytest.approx(
+        8 * 0.5 + sum(spec.load_minutes_shared(k) for k in range(1, 9)))
+
+
+def test_placement_revokes_node_local_leases_on_allocation():
+    """A lease on a node whose free GPUs a starting job consumed must be
+    revoked even when total free capacity still covers the lease count:
+    leases are node-local, not abstract."""
+    spec = ClusterSpec(n_nodes=2)
+    j0 = JobRecord(0, "evaluation", 1, 0.0, 0.05, "completed")
+    big = JobRecord(1, "evaluation", 8, 10.0, 5.0, "completed")
+    bor = TrialBorrower([BorrowItem("x", 100.0)], restart_cost_min=0.5,
+                        spec=spec, max_leases=1, record_leases=True)
+    replay_trace([j0, big], 16, reserved_frac=0.0,
+                 config=ReplayConfig(placement=True, borrower=bor))
+    # the shard leased a whole-free node at t=0; the 8-GPU job at t=10
+    # takes a whole node — whichever node it lands on, the ledger keeps
+    # the lease and the job on disjoint GPUs or revokes the lease
+    assert big.queue_min == pytest.approx(0.0)
+    assert bor.lease_count >= 1
+    for t0, t1 in bor.lease_records:
+        assert t1 >= t0
+
+
+# --- best-effort cycles: capacity + work + checkpoint conservation -----------
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(20, 80), gpus=st.integers(8, 48),
+       seed=st.integers(0, 40), rate=st.floats(0.0, 0.5),
+       be_frac=st.floats(0.2, 0.9))
+def test_best_effort_cycles_conserve_capacity_work_and_checkpoints(
+        n, gpus, seed, rate, be_frac):
+    """For ANY small trace with the whole machinery on (elastic shrink,
+    regrowth with re-shard stalls, node-local placement, best-effort
+    leases, trial borrowing): job segments plus lease spans never exceed
+    the cluster, executed GPU-time equals useful + lost work per job,
+    every best-effort rollback lands on a checkpoint multiple, and the
+    quota-reclaim ledger reconciles exactly with the revoke segments."""
+    rng = np.random.default_rng(seed)
+    jobs = _random_jobs(rng, n, gpus)
+    for j in jobs:
+        if j.jtype != "pretrain" and rng.random() < be_frac:
+            j.best_effort = True
+    items = [BorrowItem(f"i{k}", float(rng.uniform(0.5, 20.0)))
+             for k in range(int(rng.integers(1, 10)))]
+    placement = bool(seed % 2)
+    bor = TrialBorrower(items, restart_cost_min=0.3, max_leases=gpus,
+                        record_leases=True,
+                        spec=ClusterSpec(n_nodes=max(gpus // 4, 1))
+                        if placement else None)
+    inj = FailureInjector(seed=seed, rate_scale=rate * 5e3)
+    interval = 10.0
+    res = replay_trace(jobs, gpus, reserved_frac=0.6,
+                       config=ReplayConfig(injector=inj, node_gpus=4,
+                                           recovery_policy="elastic",
+                                           checkpoint_interval_min=interval,
+                                           placement=placement,
+                                           reshard_cost_min=0.25,
+                                           borrower=bor,
+                                           record_segments=True, seed=seed))
+    spans = res.segments + [(-1, 1, t0, t1, "lease")
+                            for t0, t1 in bor.lease_records]
+    _assert_capacity_conserved(spans, gpus)
+    _assert_work_identity(jobs, res)
+    # checkpoint accounting: a revoked/preempted best-effort job always
+    # resumes from an exact checkpoint multiple, never loses checkpointed
+    # work, and its loss ledger reconciles with the revoke segments
+    revokes = collections.Counter(s[0] for s in res.segments
+                                  if s[4] == "revoke")
+    reclaim = res.by_class.get(QUOTA_RECLAIM)
+    assert sum(revokes.values()) == (reclaim.failures if reclaim else 0)
+    for j in jobs:
+        if j.best_effort:
+            assert j._done == pytest.approx(
+                math.floor(j._done / interval + 1e-9) * interval, abs=1e-6) \
+                or j._done == pytest.approx(j.duration_min)
+            assert revokes[j.job_id] <= j.restarts
+    # borrower ledger: borrowed time == total consumption across shards
+    consumed = sum(it.work_min + it.overhead_min - it.remaining_min
+                   for it in bor.items)
+    assert bor.borrowed_gpu_min == pytest.approx(consumed, abs=1e-6)

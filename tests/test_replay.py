@@ -460,6 +460,73 @@ def test_shared_diagnosis_loop_reports_per_run_deltas():
         results[0].diagnosis_pipeline_runs   # cache stayed warm
 
 
+def test_shared_diagnosis_loop_deltas_across_interleaved_worlds():
+    """The bench_pool pattern: ONE DiagnosisLoop shared across interleaved
+    multi-world replays with different configs (plain / elastic / EASY +
+    pool). Every result must report exactly its own run's incidents and
+    newly-paid pipeline runs — the snapshot scoping must not bleed counts
+    between worlds, and the per-run deltas must sum to the loop totals."""
+    from repro.cluster import DiagnosisLoop
+    loop = DiagnosisLoop()
+    jobs = generate_jobs(KALOS, seed=0, n_jobs=4000)
+    configs = [
+        ReplayConfig(injector=FailureInjector(seed=1, rate_scale=4.0),
+                     diagnosis=loop),
+        ReplayConfig(injector=FailureInjector(seed=2, rate_scale=4.0),
+                     diagnosis=loop, elastic=True),
+        ReplayConfig(injector=FailureInjector(seed=3, rate_scale=4.0),
+                     diagnosis=loop, elastic=True, backfill="easy"),
+    ]
+    results = []
+    marks = []
+    for cfg in configs:
+        before = (loop.incidents, loop.pipeline_runs)
+        results.append(replay_trace(jobs, KALOS.n_gpus, reserved_frac=0.97,
+                                    config=cfg))
+        marks.append((loop.incidents - before[0],
+                      loop.pipeline_runs - before[1]))
+    for r, (d_inc, d_runs) in zip(results, marks):
+        assert r.diagnosis_incidents == d_inc == sum(
+            sum(v.values()) for v in r.verdicts.values())
+        assert r.diagnosis_pipeline_runs == d_runs >= 0
+        assert r.diagnosis_incidents > 0
+    assert loop.incidents == sum(r.diagnosis_incidents for r in results)
+    assert loop.pipeline_runs == sum(r.diagnosis_pipeline_runs
+                                     for r in results)
+
+
+def test_head_episode_survives_fail_and_requeue():
+    """Fail-while-head audit: a job that served a blocked head episode,
+    started, *failed* and requeued must open a fresh, correctly-timed
+    episode when it becomes a blocked head again — no stale
+    ``_head_since``/``_shadow_est`` may leak across the requeue into
+    ``analysis.head_delay_stats``.
+
+    Timeline (8-GPU cluster, all jobs 8-wide so nothing overlaps):
+      X runs 0..50; H arrives at 5, heads 5..50 (episode 1: 45), fails at
+      60 (infra, overhead 10); Y arrives at 55, heads 55..60 (episode 2:
+      5); H re-arrives at 70, heads 70..90 behind Y (episode 3: 20). Under
+      EASY every episode carries a shadow estimate, and all three are
+      exact — a stale pre-fail estimate would surface as a wild error."""
+    infra = ReplayFailureClass(INFRA, 1.0, {}, restart_overhead_min=10.0)
+    x = JobRecord(0, "evaluation", 8, 0.0, 50.0, "completed")
+    h = JobRecord(1, "evaluation", 8, 5.0, 20.0, "completed")
+    y = JobRecord(2, "evaluation", 8, 55.0, 30.0, "completed")
+    inj = ScriptedInjector([None, (10.0, infra), None, None])
+    res = replay_trace([x, h, y], 8, reserved_frac=0.0,
+                       config=ReplayConfig(injector=inj, backfill="easy"))
+    assert res.head_delays == pytest.approx([45.0, 5.0, 20.0])
+    assert res.shadow_errors == pytest.approx([0.0, 0.0, 0.0])
+    assert h.queue_min == pytest.approx(45.0)
+    assert h.requeue_wait_min == pytest.approx(20.0)
+    # the same trace under plain FIFO with sampling on every head agrees
+    inj = ScriptedInjector([None, (10.0, infra), None, None])
+    res = replay_trace([x, h, y], 8, reserved_frac=0.0,
+                       config=ReplayConfig(injector=inj,
+                                           head_delay_sample=1))
+    assert res.head_delays == pytest.approx([45.0, 5.0, 20.0])
+
+
 def test_killed_job_charges_no_restart_overhead():
     """A failure that kills the job restarts nothing: by_class and
     by_policy overhead totals must reconcile exactly."""
