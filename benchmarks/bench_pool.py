@@ -32,15 +32,19 @@ This bench characterizes both sides at Seren scale (fast mode: Kalos 20k):
     ``events_per_calib``, gated by ``benchmarks.check_regression``
     alongside the replay/evalsched gates.
 
-One ``DiagnosisLoop`` is shared across every world and the probe, so the
-verdict cache stays warm between runs while each ``ReplayResult`` still
-reports per-run deltas (regression-tested in ``tests/test_replay.py``).
+The four worlds (repair-only, pool, EASY, probe) replay deterministically
+regenerated traces and are independent, so they run in parallel via
+``benchmarks.common.run_worlds`` — the suite used to walk them
+sequentially, which dominated its wall time. Each world keeps one warm
+``DiagnosisLoop`` across its own replays (bounded verdict cache,
+per-world; the engine's shared-loop delta accounting is regression-tested
+in ``tests/test_replay.py``).
 """
 from __future__ import annotations
 
 import time
 
-from benchmarks.common import Row, calibrated_probe, emit
+from benchmarks.common import Row, calibrated_probe, emit, run_worlds
 from repro.cluster import (KALOS, SEREN, DiagnosisLoop, FailureInjector,
                            ReplayConfig, generate_jobs, replay_trace)
 from repro.core.evalsched import STORAGE_SPEC, TrialBorrower
@@ -67,50 +71,63 @@ def _config(loop: DiagnosisLoop, *, regrow: bool = True, borrower=None,
                         borrower=borrower, backfill=backfill)
 
 
-def run(fast: bool = False) -> list[Row]:
+def _jobs(fast: bool):
     spec = KALOS if fast else SEREN
-    n_jobs = N_JOBS_FAST if fast else N_JOBS_FULL
-    frac = 0.97 if fast else 0.95
-    jobs = generate_jobs(spec, seed=0, n_jobs=n_jobs,
-                         best_effort_frac=BEST_EFFORT_FRAC)
-    loop = DiagnosisLoop()       # shared: warm verdict cache across worlds
+    return spec, generate_jobs(spec, seed=0,
+                               n_jobs=N_JOBS_FAST if fast else N_JOBS_FULL,
+                               best_effort_frac=BEST_EFFORT_FRAC)
 
-    # 1) repair-only world (PR-2 semantics): width returns only at REPAIR
-    off = replay_trace(jobs, spec.n_gpus, reserved_frac=frac,
-                       config=_config(loop, regrow=False))
-    off_shrinks = max(off.elastic_shrinks, 1)
-    off_ratio = off.elastic_regrows / off_shrinks
 
-    # 2) pool world: node-local placement + opportunistic regrowth +
-    #    best-effort revocable leases + trial borrowing
-    borrower = _borrower(repeat=100 if fast else 500)
+# -- parallel worlds (module-level: must pickle) ----------------------------
+
+def _world_repair_only(fast: bool) -> dict:
+    """PR-2 semantics: width returns only at the lender node's REPAIR."""
+    spec, jobs = _jobs(fast)
+    res = replay_trace(jobs, spec.n_gpus,
+                       reserved_frac=0.97 if fast else 0.95,
+                       config=_config(DiagnosisLoop(), regrow=False))
+    return {"shrinks": res.elastic_shrinks, "regrows": res.elastic_regrows}
+
+
+def _world_pool(fast: bool) -> dict:
+    """Node-local placement + opportunistic regrowth + best-effort
+    revocable leases + trial borrowing."""
+    spec, jobs = _jobs(fast)
+    loop = DiagnosisLoop()
     t0 = time.perf_counter()
-    on = replay_trace(jobs, spec.n_gpus, reserved_frac=frac,
-                      config=_config(loop, borrower=borrower,
-                                     placement=True))
+    res = replay_trace(jobs, spec.n_gpus,
+                       reserved_frac=0.97 if fast else 0.95,
+                       config=_config(loop,
+                                      borrower=_borrower(
+                                          repeat=100 if fast else 500),
+                                      placement=True))
     wall = time.perf_counter() - t0
-    s = on.summary()
-    pool = s["pool"]
-    placement = s["placement"]
-    be = pool["best_effort"]
-    on_shrinks = max(on.elastic_shrinks, 1)
-    on_ratio = (pool["regrowth"]["pool_regrows"]
-                + pool["regrowth"]["repair_regrows"]) / on_shrinks
-    borrow = pool["borrow"]
+    s = res.summary()
+    return {"wall": wall, "shrinks": res.elastic_shrinks,
+            "pool": s["pool"], "placement": s["placement"],
+            "pipeline_runs": loop.pipeline_runs}
 
-    # 3) EASY world: head-delay tail + shadow-estimate error (the figure)
-    easy = replay_trace(jobs, spec.n_gpus, reserved_frac=frac,
-                        config=_config(loop, backfill="easy"))
-    hd = easy.summary()["head_delay"]
-    err = hd["shadow_error"]
 
-    # 4) fixed-shape calibrated throughput probe (EASY + borrower +
-    #    placement + best-effort: the most machinery the engine can run at
-    #    once); methodology in benchmarks.common.calibrated_probe, shared
-    #    with the replay gate
+def _world_easy(fast: bool) -> dict:
+    """EASY world: head-delay tail + shadow-estimate error (the figure)."""
+    spec, jobs = _jobs(fast)
+    loop = DiagnosisLoop()
+    res = replay_trace(jobs, spec.n_gpus,
+                       reserved_frac=0.97 if fast else 0.95,
+                       config=_config(loop, backfill="easy"))
+    return {"head_delay": res.summary()["head_delay"],
+            "pipeline_runs": loop.pipeline_runs}
+
+
+def _world_probe() -> float:
+    """Fixed-shape calibrated throughput probe (EASY + borrower +
+    placement + best-effort: the most machinery the engine can run at
+    once); methodology in benchmarks.common.calibrated_probe, shared with
+    the replay gates. One warm DiagnosisLoop across the rounds."""
     probe_jobs = generate_jobs(KALOS, seed=0, n_jobs=N_JOBS_PROBE,
                                best_effort_frac=BEST_EFFORT_FRAC)
-    events_per_calib = calibrated_probe(
+    loop = DiagnosisLoop()
+    return calibrated_probe(
         lambda: replay_trace(
             probe_jobs, KALOS.n_gpus, reserved_frac=0.97,
             config=_config(loop,
@@ -118,15 +135,39 @@ def run(fast: bool = False) -> list[Row]:
                            backfill="easy",
                            placement=True)).events_processed)
 
+
+def run(fast: bool = False) -> list[Row]:
+    n_jobs = N_JOBS_FAST if fast else N_JOBS_FULL
+    out = run_worlds({
+        "off": (_world_repair_only, (fast,)),
+        "on": (_world_pool, (fast,)),
+        "easy": (_world_easy, (fast,)),
+        "probe": (_world_probe,),
+    })
+    off, on, easy = out["off"], out["on"], out["easy"]
+    events_per_calib = out["probe"]
+
+    off_ratio = off["regrows"] / max(off["shrinks"], 1)
+    pool = on["pool"]
+    placement = on["placement"]
+    be = pool["best_effort"]
+    on_ratio = (pool["regrowth"]["pool_regrows"]
+                + pool["regrowth"]["repair_regrows"]) \
+        / max(on["shrinks"], 1)
+    borrow = pool["borrow"]
+    hd = easy["head_delay"]
+    err = hd["shadow_error"]
+    runs_max = max(on["pipeline_runs"], easy["pipeline_runs"])
+
     return [
         Row("pool", "n_jobs", float(n_jobs), "", "", None),
-        Row("pool", "replay_wall_s", wall, "", "s"),
+        Row("pool", "replay_wall_s", on["wall"], "", "s"),
         Row("pool", "events_per_calib", events_per_calib,
             "CI regression gate (calibrated)", ""),
         # -- regrowth: pool vs repair-only ----------------------------------
-        Row("pool", "elastic_shrinks", float(on.elastic_shrinks),
+        Row("pool", "elastic_shrinks", float(on["shrinks"]),
             "hardware-verdict wide jobs shrank", "",
-            on.elastic_shrinks > 0),
+            on["shrinks"] > 0),
         Row("pool", "pool_regrows", float(pool["regrowth"]["pool_regrows"]),
             "width reclaimed from the free pool", "",
             pool["regrowth"]["pool_regrows"] > 0),
@@ -191,10 +232,10 @@ def run(fast: bool = False) -> list[Row]:
             abs(err["p50_min"]) < 1.0),
         Row("pool", "easy_shadow_error_p99_min", err["p99_min"],
             "tail = unforeseen failures/repairs", "min", err["n"] > 0),
-        # -- shared diagnosis loop ------------------------------------------
-        Row("pool", "diagnosis_pipeline_runs_total", float(loop.pipeline_runs),
-            "verdict cache shared across worlds", "",
-            0 < loop.pipeline_runs <= 3 * 32),
+        # -- per-world diagnosis loops --------------------------------------
+        Row("pool", "diagnosis_pipeline_runs_total", float(runs_max),
+            "per-world verdict cache stays bounded", "",
+            0 < runs_max <= 3 * 32),
     ]
 
 

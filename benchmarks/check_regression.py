@@ -50,7 +50,15 @@ from typing import Optional
 # shape-independent (full mode saves much larger checkpoints, inflating
 # the ratio ~10x) — its committed baseline must come from a --fast run.
 GATES: dict[str, list[tuple[str, str, Optional[float]]]] = {
-    "replay": [("events_per_calib", "higher", None)],
+    # events_per_calib is the historical aggregate gate (the full-feature
+    # configuration); events_per_calib_full is the same measurement under
+    # its per-knob name (PR 5's legacy/placement/best_effort/full feature
+    # matrix) — gated so the per-knob row can never silently vanish or
+    # regress while the aggregate survives on a renamed probe. A metric
+    # missing from the *baseline* is skipped (new rows don't fail
+    # retroactively), so committing a pre-PR-5 baseline stays green.
+    "replay": [("events_per_calib", "higher", None),
+               ("events_per_calib_full", "higher", None)],
     "pool": [("events_per_calib", "higher", None)],
     # the fair-share engine's rate recomputation is dict/cache-bound while
     # the calibration chunk is heap-bound, so the ratio cancels contention

@@ -1,6 +1,8 @@
-"""Benchmark plumbing: result rows, artifact output, CPU calibration."""
+"""Benchmark plumbing: result rows, artifact output, CPU calibration, and
+the parallel multi-world runner."""
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import gc
 import heapq
@@ -11,6 +13,70 @@ import time
 from typing import Any, Callable, Optional
 
 ARTIFACTS = os.environ.get("REPRO_BENCH_DIR", "artifacts/bench")
+
+# sequential fallback for the multi-world runner: debugging, or boxes where
+# process spawn is more expensive than the parallelism buys back
+SEQUENTIAL = os.environ.get("REPRO_BENCH_SEQUENTIAL") == "1"
+
+
+def _run_world(entry: tuple) -> Any:
+    fn, args, kwargs = entry
+    return fn(*args, **kwargs)
+
+
+def run_worlds(worlds: "dict[str, tuple]",
+               max_workers: Optional[int] = None) -> dict[str, Any]:
+    """Run independent benchmark *worlds* in parallel, one process each.
+
+    ``worlds`` maps a name to ``(fn, args)`` or ``(fn, args, kwargs)`` where
+    ``fn`` is a module-level (picklable) callable that builds its own inputs
+    from deterministic seeds and returns a picklable result. Returns
+    ``{name: result}``.
+
+    The bench suites replay the same trace through several configurations
+    (repair-only vs pool vs EASY worlds, baseline vs injected vs parity
+    runs); those replays are independent by construction — each world
+    regenerates its jobs from a fixed seed — so they can overlap instead of
+    dominating CI wall time sequentially. ``events_per_calib`` probe
+    worlds may run in here too: each probe interleaves its own calibration
+    chunks (see :func:`calibrated_probe`), which is what makes the gated
+    ratio robust to contention from sibling worlds — the same property
+    that lets it survive noisy shared CI runners. Wall-clock rows, by
+    contrast, should be measured *outside* any parallel phase (see
+    ``bench_replay``'s headline run).
+
+    Falls back to in-process sequential execution when
+    ``REPRO_BENCH_SEQUENTIAL=1`` or the pool cannot be spawned; if the
+    pool breaks mid-run (a worker crashed or was OOM-killed), only the
+    worlds that did not complete are re-run inline, so finished results
+    are kept and the crash site is visible in the output.
+    """
+    norm = {name: (w[0], w[1] if len(w) > 1 else (),
+                   w[2] if len(w) > 2 else {})
+            for name, w in worlds.items()}
+    if SEQUENTIAL or len(norm) <= 1:
+        return {name: _run_world(w) for name, w in norm.items()}
+    workers = max_workers or min(len(norm), os.cpu_count() or 2)
+    try:
+        with concurrent.futures.ProcessPoolExecutor(workers) as pool:
+            futs = {name: pool.submit(_run_world, w)
+                    for name, w in norm.items()}
+            out: dict[str, Any] = {}
+            failed: list[str] = []
+            for name, f in futs.items():
+                try:
+                    out[name] = f.result()
+                except concurrent.futures.process.BrokenProcessPool:
+                    failed.append(name)
+    except OSError:
+        # constrained sandbox (no fork/spawn): run the worlds inline
+        return {name: _run_world(w) for name, w in norm.items()}
+    if failed:
+        print(f"# run_worlds: process pool broke; rerunning {failed} "
+              "inline (completed worlds kept)")
+        for name in failed:
+            out[name] = _run_world(norm[name])
+    return out
 
 
 def calibration_chunk(n: int = 300_000) -> tuple[int, float]:

@@ -1,0 +1,107 @@
+"""Profiling harness for the replay engine's per-event hot path.
+
+Runs cProfile over a 200k-job full-feature replay (placement + best-effort
+revocable leases + elastic regrowth + trial borrowing + diagnosis — the
+heaviest configuration the engine supports) and writes the top-25
+cumulative-time functions to ``artifacts/bench/profile_replay.json``.
+
+This is the instrument behind the PR 5 hot-path rewrite: optimize what the
+table shows, not what looks slow. Two caveats the table itself cannot tell
+you (both bit us during that work):
+
+  * cProfile charges ~1 us of tracer overhead per function call, so
+    call-heavy code looks relatively worse than it is — treat the
+    ``ncalls`` column as the reliable signal and confirm wall-clock wins
+    with ``time.process_time`` on a quiet machine;
+  * results on shared runners swing with CPU throttling; the calibrated
+    ``events_per_calib`` probes (``benchmarks.common.calibrated_probe``)
+    are the regression-grade numbers, this profile is for *finding* the
+    next target.
+
+Usage:
+
+  PYTHONPATH=src python -m benchmarks.profile_replay [--fast] [--top N]
+  PYTHONPATH=src python -m benchmarks.run --profile    # same, via runner
+"""
+from __future__ import annotations
+
+import argparse
+import cProfile
+import json
+import os
+import pstats
+import time
+
+from benchmarks.common import ARTIFACTS
+from repro.cluster import (KALOS, FailureInjector, ReplayConfig,
+                           generate_jobs, replay_trace)
+from repro.core.evalsched import STORAGE_SPEC, TrialBorrower
+
+N_JOBS = 200_000
+N_JOBS_FAST = 20_000
+TOP_N = 25
+
+
+def profile_replay(n_jobs: int = N_JOBS, top_n: int = TOP_N) -> dict:
+    """Profile one full-feature replay; returns the JSON-ready document."""
+    jobs = generate_jobs(KALOS, seed=0, n_jobs=n_jobs, best_effort_frac=0.3)
+    cfg = ReplayConfig(injector=FailureInjector(seed=1, rate_scale=2.0),
+                       diagnose=True, elastic=True, placement=True,
+                       reshard_cost_min=1.0,
+                       borrower=TrialBorrower.from_suite(
+                           63, repeat=200, spec=STORAGE_SPEC))
+    prof = cProfile.Profile()
+    t0 = time.perf_counter()
+    prof.enable()
+    res = replay_trace(jobs, KALOS.n_gpus, reserved_frac=0.97, config=cfg)
+    prof.disable()
+    wall = time.perf_counter() - t0
+
+    stats = pstats.Stats(prof)
+    stats.sort_stats("cumulative")
+    width, funcs = stats.get_print_list([top_n])
+    rows = []
+    for func in funcs:
+        cc, nc, tt, ct, _ = stats.stats[func]
+        path, line, name = func
+        rows.append({
+            "function": f"{os.path.basename(path)}:{line}({name})",
+            "ncalls": int(nc),
+            "primitive_calls": int(cc),
+            "tottime_s": round(tt, 4),
+            "cumtime_s": round(ct, 4),
+        })
+    return {
+        "config": "full-feature (placement+best-effort+borrow+elastic"
+                  "+diagnosis)",
+        "n_jobs": n_jobs,
+        "events_processed": res.events_processed,
+        "profiled_wall_s": round(wall, 3),
+        "events_per_profiled_s": round(res.events_processed / wall, 1),
+        "note": "profiled wall includes cProfile tracer overhead "
+                "(~1us/call); use events_per_calib for regression-grade "
+                "throughput",
+        "top_cumulative": rows,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help=f"profile {N_JOBS_FAST} jobs instead of {N_JOBS}")
+    ap.add_argument("--top", type=int, default=TOP_N)
+    args = ap.parse_args(argv)
+    doc = profile_replay(N_JOBS_FAST if args.fast else N_JOBS, args.top)
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    out = os.path.join(ARTIFACTS, "profile_replay.json")
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# profile: {doc['events_processed']} events in "
+          f"{doc['profiled_wall_s']}s (profiled) -> {out}")
+    for r in doc["top_cumulative"][:10]:
+        print(f"#   {r['cumtime_s']:8.3f}s cum {r['ncalls']:>9} calls  "
+              f"{r['function']}")
+
+
+if __name__ == "__main__":
+    main()

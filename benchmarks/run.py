@@ -1,13 +1,20 @@
 """Benchmark runner: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME] [--profile]
 
 After a run that produced all three gated throughput artifacts
 (replay/pool/evalsched), the runner consolidates their ``events_per_calib``
 values into ``BENCH_replay.json`` — a per-commit *trajectory* of the
-calibrated throughput history. The fresh file extends the committed
-baseline's history (``artifacts/bench/BENCH_replay.json``), so CI uploads
-carry the whole perf history across PRs instead of one point per run.
+calibrated throughput history, including the replay bench's per-knob rows
+(``replay_legacy`` / ``replay_placement`` / ``replay_best_effort`` /
+``replay_full``) so each subsystem's cost is tracked per commit, not just
+the aggregate. The fresh file extends the committed baseline's history
+(``artifacts/bench/BENCH_replay.json``), so CI uploads carry the whole
+perf history across PRs instead of one point per run.
+
+``--profile`` additionally runs ``benchmarks.profile_replay`` (cProfile
+over a full-feature replay, top-25 cumulative table to
+``artifacts/bench/profile_replay.json``).
 """
 from __future__ import annotations
 
@@ -26,6 +33,14 @@ from benchmarks.common import ARTIFACTS, emit
 
 # benches whose calibrated throughput forms the consolidated trajectory
 TRAJECTORY_BENCHES = ("replay", "pool", "evalsched")
+# per-knob replay rows recorded alongside (trajectory key -> source metric);
+# optional: absent from an artifact (e.g. a pre-PR-5 baseline) -> skipped
+TRAJECTORY_EXTRAS = {
+    "replay_legacy": ("replay", "events_per_calib_legacy"),
+    "replay_placement": ("replay", "events_per_calib_placement"),
+    "replay_best_effort": ("replay", "events_per_calib_best_effort"),
+    "replay_full": ("replay", "events_per_calib_full"),
+}
 TRAJECTORY_BASELINE = os.path.join("artifacts", "bench", "BENCH_replay.json")
 
 
@@ -56,17 +71,24 @@ def write_trajectory(artifacts_dir: str = ARTIFACTS,
     partially-failed run can never relabel stale numbers as fresh."""
     entry: dict = {"label": label or _run_label(),
                    "date": time.strftime("%Y-%m-%d")}
+    rows_by_bench: dict = {}
     for bench in TRAJECTORY_BENCHES:
         path = os.path.join(artifacts_dir, f"{bench}.json")
         if not os.path.exists(path):
             return None
         with open(path) as f:
             rows = json.load(f)
+        rows_by_bench[bench] = rows
         value = next((r["value"] for r in rows
                       if r["metric"] == "events_per_calib"), None)
         if value is None:
             return None
         entry[bench] = float(value)
+    for key, (bench, metric) in TRAJECTORY_EXTRAS.items():
+        value = next((r["value"] for r in rows_by_bench.get(bench, ())
+                      if r["metric"] == metric), None)
+        if value is not None:
+            entry[key] = float(value)
     history: list = []
     if os.path.exists(baseline_path):
         with open(baseline_path) as f:
@@ -101,6 +123,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--profile", action="store_true",
+                    help="also run benchmarks.profile_replay (cProfile "
+                         "hot-path table -> profile_replay.json)")
     args = ap.parse_args()
     failures = []
     succeeded = []
@@ -115,6 +140,13 @@ def main() -> None:
         except Exception:  # noqa: BLE001
             failures.append(name)
             print(f"# {name} FAILED:\n{traceback.format_exc()}")
+    if args.profile:
+        from benchmarks import profile_replay
+        try:
+            profile_replay.main(["--fast"] if args.fast else [])
+        except Exception:  # noqa: BLE001
+            failures.append("profile_replay")
+            print(f"# profile_replay FAILED:\n{traceback.format_exc()}")
     if all(b in succeeded for b in TRAJECTORY_BENCHES):
         # only artifacts produced by THIS invocation may enter the
         # trajectory — a --only or partially-failed run must not relabel

@@ -7,7 +7,7 @@ paper's reported values.
 from __future__ import annotations
 
 import collections
-from typing import Iterable
+from typing import Iterable, Optional
 
 import numpy as np
 
@@ -181,17 +181,25 @@ def head_delay_stats(result) -> dict:
     return out
 
 
-def pool_stats(result) -> dict:
+def pool_stats(result, *, be_total: Optional[int] = None,
+               be_never: Optional[int] = None) -> dict:
     """Elastic-capacity-pool ledger stats (§6.1 x §6.2): time-integrated
     free capacity, opportunistic regrowth activity (incl. the explicit
     re-shard stalls it paid), the best-effort revocable-lease tier, and —
     when a ``TrialBorrower`` was attached — borrowed GPU-minutes, lease
-    and preemption counts. Needs a ``replay_trace`` ReplayResult."""
+    and preemption counts. Needs a ``replay_trace`` ReplayResult.
+
+    ``be_total``/``be_never`` let ``ReplayResult.summary()`` pass the
+    best-effort-tier counts it already accumulated in its single job-record
+    pass; when omitted, the records are scanned here (same counts)."""
     borrow = result.borrow or {}
     borrowed = borrow.get("borrowed_gpu_min", 0.0)
     free = result.pool_free_gpu_min
     reclaim = result.by_class.get(QUOTA_RECLAIM)
-    be_jobs = [j for j in result.jobs if j.best_effort]
+    if be_total is None:
+        be_total = sum(1 for j in result.jobs if j.best_effort)
+        be_never = sum(1 for j in result.jobs
+                       if j.best_effort and not j.started)
     return {
         "free_gpu_hours": free / 60.0,
         "horizon_min": result.horizon_min,
@@ -208,12 +216,12 @@ def pool_stats(result) -> dict:
         },
         "best_effort": {
             # the revocable-lease tier: §3.2 quota reclamation as policy
-            "jobs": len(be_jobs),
+            "jobs": int(be_total),
             "lease_starts": result.be_lease_starts,
             "revocations": reclaim.failures if reclaim else 0,
             "lost_gpu_hours": reclaim.lost_gpu_min / 60.0 if reclaim else 0.0,
             "revoke_overhead_min": reclaim.overhead_min if reclaim else 0.0,
-            "never_started": sum(1 for j in be_jobs if not j.started),
+            "never_started": int(be_never),
         },
         "borrow": borrow,
         "borrowed_gpu_min": borrowed,

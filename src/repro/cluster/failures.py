@@ -151,17 +151,56 @@ class FailureInjector:
         self.taxonomy = tuple(taxonomy)
         self.rate_scale = rate_scale
         self._rng = random.Random(seed ^ 0x5EED)
+        # draw() runs once per execution attempt — the hottest injector
+        # path of a million-job replay — so the per-class ``rate_for``
+        # lookups are cached per jtype. The cached value is exactly
+        # ``rate_for``'s product, so ``rate * gpus * rate_scale`` below
+        # rounds identically to the uncached expression (bit-exact replay
+        # contract: the RNG consumption pattern must not change either,
+        # which is why zero-rate classes are still skipped *without*
+        # drawing).
+        self._rates_by_jtype: dict = {}
+
+    def _rates(self, jtype: str) -> tuple:
+        table = tuple((cls.rate_for(jtype), cls) for cls in self.taxonomy)
+        self._rates_by_jtype[jtype] = table
+        return table
+
+    def rates_for(self, jtype: str) -> tuple:
+        """Cached ``(rate_for(jtype), cls)`` pairs — the replay engine
+        inlines :meth:`draw`'s loop into its start path and reads the
+        per-jtype table through this accessor."""
+        table = self._rates_by_jtype.get(jtype)
+        if table is None:
+            table = self._rates(jtype)
+        return table
 
     def draw(self, jtype: str, gpus: int, remaining_min: float
              ) -> Optional[tuple[float, ReplayFailureClass]]:
-        best: Optional[tuple[float, ReplayFailureClass]] = None
-        rng = self._rng
-        for cls in self.taxonomy:
-            rate_hr = cls.rate_for(jtype) * gpus * self.rate_scale
+        # running (best_t, best_cls) scalars instead of a tuple per
+        # candidate: seeding best_t with remaining_min folds the
+        # ``ttf < remaining and ttf < best`` pair into one compare, with
+        # identical winners (the first strict improvement wins either way)
+        best_t = remaining_min
+        best_cls = None
+        rand = self._rng.random
+        log = math.log
+        scale = self.rate_scale
+        table = self._rates_by_jtype.get(jtype)
+        if table is None:
+            table = self._rates(jtype)
+        for rate, cls in table:
+            rate_hr = rate * gpus * scale
             if rate_hr <= 0.0:
                 continue
+            u = rand()
+            if u < 1e-300:
+                u = 1e-300
             # exponential TTF in minutes
-            ttf = -math.log(max(rng.random(), 1e-300)) / rate_hr * 60.0
-            if ttf < remaining_min and (best is None or ttf < best[0]):
-                best = (ttf, cls)
-        return best
+            ttf = -log(u) / rate_hr * 60.0
+            if ttf < best_t:
+                best_t = ttf
+                best_cls = cls
+        if best_cls is None:
+            return None
+        return best_t, best_cls

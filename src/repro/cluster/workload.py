@@ -82,7 +82,7 @@ SEREN = WorkloadSpec(
     ))
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class JobRecord:
     job_id: int
     jtype: str
@@ -102,6 +102,37 @@ class JobRecord:
     # lease — the paper's §3.2 quota-reclamation preemption as a
     # scheduling policy (see repro.cluster.replay)
     best_effort: bool = False
+    # -- engine-transient state (repro.cluster.replay / scheduler) ----------
+    # Declared so the class can carry __slots__: the replay engine reads
+    # and writes these per event, and slot access keeps the hottest loop of
+    # the million-job replay off the per-instance dict. Excluded from
+    # __init__/repr/eq; the replay's reset loop (re)initializes them.
+    _alloc: tuple = dataclasses.field(
+        init=False, repr=False, compare=False, default=("lo", 0, 0))
+    _arrived_at: float = dataclasses.field(
+        init=False, repr=False, compare=False, default=0.0)
+    _done: float = dataclasses.field(
+        init=False, repr=False, compare=False, default=0.0)
+    _started: bool = dataclasses.field(
+        init=False, repr=False, compare=False, default=False)
+    _running: bool = dataclasses.field(
+        init=False, repr=False, compare=False, default=False)
+    _width: int = dataclasses.field(
+        init=False, repr=False, compare=False, default=0)
+    _epoch: int = dataclasses.field(
+        init=False, repr=False, compare=False, default=0)
+    _prog: float = dataclasses.field(
+        init=False, repr=False, compare=False, default=0.0)
+    _seg_start: float = dataclasses.field(
+        init=False, repr=False, compare=False, default=0.0)
+    _head_since: Optional[float] = dataclasses.field(
+        init=False, repr=False, compare=False, default=None)
+    _shadow_est: Optional[float] = dataclasses.field(
+        init=False, repr=False, compare=False, default=None)
+    _nodes: Optional[dict] = dataclasses.field(
+        init=False, repr=False, compare=False, default=None)
+    _hi: bool = dataclasses.field(
+        init=False, repr=False, compare=False, default=False)
 
     @property
     def gpu_time(self) -> float:

@@ -267,6 +267,10 @@ class TrialBorrower:
         # placement mode: live lease cover per node + realized load-time
         # bins keyed by NIC concurrency at acquisition (the Fig. 16 curve)
         self.leases_by_node: dict = {}
+        # node -> list of in-flight model-load end times (same membership
+        # as scanning ``active`` for that node; keeps the NIC-concurrency
+        # snapshot O(node's leases) instead of O(active) per acquisition)
+        self._load_ends: dict = {}
         self.load_bins: dict = {}
         # (t_lease, t_release) spans, 1 GPU each, for conservation tests
         self.lease_records: Optional[list] = [] if record_leases else None
@@ -299,12 +303,21 @@ class TrialBorrower:
         self.lease_count += 1
 
     def _drop_node(self, lease: _Lease) -> None:
-        if lease.node >= 0:
-            left = self.leases_by_node[lease.node] - 1
+        node = lease.node
+        if node >= 0:
+            left = self.leases_by_node[node] - 1
             if left:
-                self.leases_by_node[lease.node] = left
+                self.leases_by_node[node] = left
             else:
-                del self.leases_by_node[lease.node]
+                del self.leases_by_node[node]
+            ends = self._load_ends.get(node)
+            if ends is not None:
+                try:
+                    ends.remove(lease.load_end)
+                except ValueError:
+                    pass            # already pruned by a later acquisition
+                if not ends:
+                    del self._load_ends[node]
 
     def _lease(self, now: float, nodes=None) -> bool:
         """Acquire one free GPU for the next pending shard; returns False
@@ -317,15 +330,25 @@ class TrialBorrower:
                 return False           # only unplaced capacity is left
             # snapshot-priced NIC share: loads already in flight on this
             # node at acquisition (the §6.2 fair-share collapse; rates are
-            # not re-divided mid-load, unlike the evalsched Engine)
-            k = 1 + sum(1 for l in self.active
-                        if l.node == node and l.load_end > now + 1e-12)
+            # not re-divided mid-load, unlike the evalsched Engine). The
+            # in-flight set is read off the per-node load-end list — the
+            # same membership a scan over ``active`` would count, expired
+            # entries pruned as they are passed (event time is monotonic)
+            ends = self._load_ends.get(node)
+            if ends is None:
+                ends = self._load_ends[node] = []
+            elif ends:
+                live = [t for t in ends if t > now + 1e-12]
+                if len(live) != len(ends):
+                    ends[:] = live
+            k = 1 + len(ends)
             if self.spec is not None:
                 load = self.spec.load_minutes_shared(k)
             b = self.load_bins.setdefault(k, [0, 0.0])
             b[0] += 1
             b[1] += load
             self.leases_by_node[node] = self.leases_by_node.get(node, 0) + 1
+            ends.append(now + self.restart_cost_min + load)
         item = self.pending.popleft()
         self._charge(item, load)
         lease = _Lease(item, now, now, now + item.remaining_min, node,

@@ -136,20 +136,26 @@ class OfflineLLM:
         log = prompt.split("Compressed error log:\n", 1)[1]
         log = log.split("Identify the single ROOT CAUSE", 1)[0]
         lines = [l for l in log.splitlines() if l.strip()]
+        # the scoring scan is the §6.1 pipeline's hot loop: lowercase each
+        # line once (it used to be lowered per signature token) and read
+        # template signatures from the module cache — the scores are
+        # unchanged, just not recomputed per (template, line, token)
+        lower = [l.lower() for l in lines]
         best, best_score, best_line = None, -1.0, ""
         for ft in TABLE3:
             score, line_hit = 0.0, ""
             for tmpl in ft.templates:
                 sig = _signature(tmpl)
-                for line in lines:
-                    hit = sum(1 for s in sig if s in line.lower())
-                    frac = hit / max(len(sig), 1)
+                n_sig = max(len(sig), 1)
+                for line, ll in zip(lines, lower):
+                    hit = sum(1 for s in sig if s in ll)
+                    frac = hit / n_sig
                     if frac >= 0.6:
                         sc = frac * (1.0 + ft.priority / 100.0)
                         if sc > score:
                             score, line_hit = sc, line
             # tiny seed jitter models LLM sampling variance
-            score += random.Random(f"{seed}:{ft.name}").random() * 0.01
+            score += _jitter(seed, ft.name)
             if score > best_score:
                 best, best_score, best_line = ft, score, line_hit
         if best is None or best_score < 0.3:
@@ -164,11 +170,31 @@ class OfflineLLM:
         })
 
 
+_SIG_CACHE: dict = {}
+_JITTER_CACHE: dict = {}
+
+
 def _signature(template: str) -> list[str]:
-    """Distinctive lowercase keywords of a failure template."""
-    t = template.replace("{d}", " ").replace("{w}", " ").lower()
-    toks = [w for w in re.split(r"[^a-z_]+", t) if len(w) >= 4]
-    return toks[:8]
+    """Distinctive lowercase keywords of a failure template (memoized —
+    the agent re-scores the same fixed taxonomy on every call)."""
+    sig = _SIG_CACHE.get(template)
+    if sig is None:
+        t = template.replace("{d}", " ").replace("{w}", " ").lower()
+        sig = _SIG_CACHE[template] = \
+            [w for w in re.split(r"[^a-z_]+", t) if len(w) >= 4][:8]
+    return sig
+
+
+def _jitter(seed: int, name: str) -> float:
+    """The agent's deterministic per-(seed, failure-type) sampling jitter;
+    memoized because seeding a fresh ``random.Random`` per score is ~100x
+    the cost of the draw it produces."""
+    key = (seed, name)
+    v = _JITTER_CACHE.get(key)
+    if v is None:
+        v = _JITTER_CACHE[key] = \
+            random.Random(f"{seed}:{name}").random() * 0.01
+    return v
 
 
 def _mitigation(ft) -> str:

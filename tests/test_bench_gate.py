@@ -21,6 +21,10 @@ def _write(dirp, bench, metrics):
 
 def _write_all(dirp, scale=1.0):
     _write(dirp, "replay", {"events_per_calib": 0.8 * scale,
+                            "events_per_calib_full": 0.8 * scale,
+                            "events_per_calib_legacy": 1.1 * scale,
+                            "events_per_calib_placement": 0.95 * scale,
+                            "events_per_calib_best_effort": 1.0 * scale,
                             "events_per_sec": 150e3 * scale})
     _write(dirp, "pool", {"events_per_calib": 0.4 * scale})
     _write(dirp, "evalsched", {"events_per_calib": 2.0 * scale})
@@ -64,11 +68,38 @@ def test_gate_single_metric_regression_is_reported(tmp_path):
     base, fresh = tmp_path / "base", tmp_path / "fresh"
     _write_all(str(base))
     _write_all(str(fresh))
-    _write(str(fresh), "replay", {"events_per_calib": 0.5,
-                                  "events_per_sec": 150e3})  # -37.5%
+    _write(str(fresh), "replay", {"events_per_calib": 0.5,   # -37.5%
+                                  "events_per_calib_full": 0.8,
+                                  "events_per_calib_legacy": 1.1,
+                                  "events_per_calib_placement": 0.95,
+                                  "events_per_calib_best_effort": 1.0,
+                                  "events_per_sec": 150e3})
     failures = check(str(fresh), str(base))
     assert len(failures) == 1
     assert "replay.events_per_calib" in failures[0]
+
+
+def test_gate_covers_replay_full_row(tmp_path):
+    """The per-knob replay_full row is gated on its own: the aggregate
+    surviving while the full-feature row tanks must still fail."""
+    assert ("events_per_calib_full", "higher", None) in GATES["replay"]
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write_all(str(base))
+    _write_all(str(fresh))
+    _write(str(fresh), "replay", {"events_per_calib": 0.8,
+                                  "events_per_calib_full": 0.3,  # -62%
+                                  "events_per_calib_legacy": 1.1,
+                                  "events_per_calib_placement": 0.95,
+                                  "events_per_calib_best_effort": 1.0,
+                                  "events_per_sec": 150e3})
+    failures = check(str(fresh), str(base))
+    assert len(failures) == 1
+    assert "replay.events_per_calib_full" in failures[0]
+    # a baseline *without* the new row (pre-PR-5 artifacts) is skipped,
+    # not failed retroactively
+    _write(str(base), "replay", {"events_per_calib": 0.8,
+                                 "events_per_sec": 150e3})
+    assert check(str(fresh), str(base)) == []
 
 
 def test_missing_baseline_is_skipped_missing_fresh_fails(tmp_path):
@@ -113,6 +144,13 @@ def test_trajectory_extends_baseline_history(tmp_path):
     assert doc["history"][-1]["replay"] == pytest.approx(0.8)
     assert doc["history"][-1]["pool"] == pytest.approx(0.4)
     assert doc["history"][-1]["evalsched"] == pytest.approx(2.0)
+    # the per-knob replay rows ride along when the artifact carries them
+    assert doc["history"][-1]["replay_full"] == pytest.approx(0.8)
+    assert doc["history"][-1]["replay_legacy"] == pytest.approx(1.1)
+    assert doc["history"][-1]["replay_placement"] == pytest.approx(0.95)
+    assert doc["history"][-1]["replay_best_effort"] == pytest.approx(1.0)
+    # the pre-PR-5 baseline entry simply lacks them — no backfill
+    assert "replay_full" not in doc["history"][0]
     out = os.path.join(str(fresh), "BENCH_replay.json")
     assert os.path.exists(out)
     # same label again (a re-run) replaces, never duplicates

@@ -1,0 +1,122 @@
+"""Golden-summary equivalence for the replay engine's hot-path rewrite.
+
+The perf work on ``repro.cluster.replay`` (incremental ``NodeLedger``
+bucket indices, dirty-flag reconcile triggers, vectorized ``analysis``
+aggregation) carries a hard contract: **bit-exact output**. Every field of
+``ReplayResult.summary()`` — queue-delay quantiles, restart counts, lost
+GPU hours, recovery/pool/placement/head-delay breakdowns — must be
+unchanged relative to the pre-optimization engine.
+
+These tests enforce it by replaying fixed 50k/20k-job traces through the
+heaviest configurations the engine supports and comparing the full
+``summary()`` tree against committed golden fixtures that were generated
+by the pre-optimization engine (PR 4). Any divergence — a different node
+picked by the placement ledger, a skipped borrower reconcile that should
+have run, a re-associated float sum in the aggregation — shows up as a
+field-level diff.
+
+Regenerating (only legitimate when the *semantics* deliberately change,
+never as part of a perf PR):
+
+    REPRO_REGOLD=1 PYTHONPATH=src python -m pytest tests/test_golden_summary.py
+
+Fixtures live in ``tests/golden/``. Floats survive the JSON round-trip
+exactly (``float(repr(x)) == x``), so the comparison is bit-exact; the
+fresh summary is normalized through ``json.dumps``/``loads`` so int dict
+keys compare against their JSON string form.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from repro.cluster import (KALOS, FailureInjector, ReplayConfig,
+                           generate_jobs, replay_trace)
+from repro.core.evalsched import STORAGE_SPEC, TrialBorrower
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+REGOLD = os.environ.get("REPRO_REGOLD") == "1"
+
+
+def _full_feature_summary() -> dict:
+    """The tentpole configuration: placement + best-effort revocable
+    leases + elastic shrink/regrow + trial borrowing + diagnosis, 50k
+    jobs on a saturated Kalos spare pool."""
+    jobs = generate_jobs(KALOS, seed=0, n_jobs=50_000, best_effort_frac=0.3)
+    borrower = TrialBorrower.from_suite(63, repeat=100, spec=STORAGE_SPEC)
+    cfg = ReplayConfig(injector=FailureInjector(seed=1, rate_scale=2.0),
+                       diagnose=True, elastic=True, placement=True,
+                       reshard_cost_min=1.0, borrower=borrower)
+    res = replay_trace(jobs, KALOS.n_gpus, reserved_frac=0.97, config=cfg)
+    return res.summary()
+
+
+def _easy_pool_summary() -> dict:
+    """EASY backfill + the full pool: the shadow-time machinery (head
+    episodes, sampled estimates, regrow admission) on top of placement
+    and best-effort leases, 20k jobs."""
+    jobs = generate_jobs(KALOS, seed=3, n_jobs=20_000, best_effort_frac=0.3)
+    borrower = TrialBorrower.from_suite(63, repeat=50, spec=STORAGE_SPEC)
+    cfg = ReplayConfig(injector=FailureInjector(seed=1, rate_scale=2.0),
+                       diagnose=True, elastic=True, placement=True,
+                       reshard_cost_min=1.0, borrower=borrower,
+                       backfill="easy")
+    res = replay_trace(jobs, KALOS.n_gpus, reserved_frac=0.97, config=cfg)
+    return res.summary()
+
+
+def _noinject_summary() -> dict:
+    """Pure queue replay (simulate_queue semantics) with greedy backfill:
+    the dispatch core with every pool feature off."""
+    jobs = generate_jobs(KALOS, seed=7, n_jobs=50_000)
+    res = replay_trace(jobs, KALOS.n_gpus, reserved_frac=0.97,
+                       config=ReplayConfig(injector=None, backfill="greedy"))
+    return res.summary()
+
+
+CASES = {
+    "full_feature_50k": _full_feature_summary,
+    "easy_pool_20k": _easy_pool_summary,
+    "noinject_greedy_50k": _noinject_summary,
+}
+
+
+def _diff(path: str, a, b, out: list) -> None:
+    """Collect leaf-level differences so a failure names the exact field."""
+    if isinstance(a, dict) and isinstance(b, dict):
+        for k in sorted(set(a) | set(b)):
+            if k not in a:
+                out.append(f"{path}.{k}: missing from golden")
+            elif k not in b:
+                out.append(f"{path}.{k}: missing from fresh")
+            else:
+                _diff(f"{path}.{k}", a[k], b[k], out)
+    elif isinstance(a, list) and isinstance(b, list):
+        if len(a) != len(b):
+            out.append(f"{path}: length {len(a)} != {len(b)}")
+        else:
+            for i, (x, y) in enumerate(zip(a, b)):
+                _diff(f"{path}[{i}]", x, y, out)
+    elif a != b:
+        out.append(f"{path}: golden={a!r} fresh={b!r}")
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_golden_summary(case):
+    fixture = os.path.join(GOLDEN_DIR, f"{case}.json")
+    # normalize through JSON so int keys / float repr match the fixture
+    fresh = json.loads(json.dumps(CASES[case]()))
+    if REGOLD or not os.path.exists(fixture):
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(fixture, "w") as f:
+            json.dump(fresh, f, indent=1, sort_keys=True)
+        pytest.skip(f"golden fixture (re)generated: {fixture}")
+    with open(fixture) as f:
+        golden = json.load(f)
+    diffs: list = []
+    _diff("summary", golden, fresh, diffs)
+    assert not diffs, (
+        f"{case}: summary diverged from the pre-optimization engine in "
+        f"{len(diffs)} field(s):\n  " + "\n  ".join(diffs[:40]))
