@@ -80,12 +80,45 @@ def _load_rows(path: str) -> dict[str, float]:
         return {r["metric"]: float(r["value"]) for r in json.load(f)}
 
 
+def check_replint_stamps(fresh_dir: str) -> list[str]:
+    """Refuse bench artifacts produced by a lint-dirty tree.
+
+    ``benchmarks.run`` stamps every artifact with the tree's replint
+    verdict (``replint_clean`` row, see ``benchmarks.common.emit``); a
+    stamp saying the tree carried non-baseline findings fails the gate —
+    numbers recorded while the determinism lint was red must never be
+    compared, let alone become committed baselines. Unstamped artifacts
+    (pre-replint baselines, direct bench-module runs) pass with a note."""
+    failures: list[str] = []
+    unstamped = 0
+    for name in sorted(os.listdir(fresh_dir)):
+        if not name.endswith(".json"):
+            continue
+        path = os.path.join(fresh_dir, name)
+        try:
+            rows = _load_rows(path)
+        except (ValueError, TypeError, KeyError):
+            continue                 # not a bench row file (e.g. profile)
+        clean = rows.get("replint_clean")
+        if clean is None:
+            unstamped += 1
+        elif clean == 0.0:
+            failures.append(
+                f"{name}: produced by a tree with non-baseline replint "
+                f"findings ({int(rows.get('replint_findings', -1))}); fix "
+                "the lint findings and re-run the benches")
+    if unstamped:
+        print(f"  replint stamp: {unstamped} unstamped artifacts "
+              "(pre-replint or direct module runs), tolerated")
+    return failures
+
+
 def check(fresh_dir: str, baseline_dir: str,
           tolerance: float = DEFAULT_TOLERANCE) -> list[str]:
     """Return the list of failure messages (empty = gate passes)."""
-    failures: list[str] = []
     print(f"perf-regression gate: fresh={fresh_dir} baseline={baseline_dir} "
           f"tolerance={tolerance:.0%}")
+    failures: list[str] = check_replint_stamps(fresh_dir)
     for bench, metrics in GATES.items():
         fresh_path = os.path.join(fresh_dir, f"{bench}.json")
         base_path = os.path.join(baseline_dir, f"{bench}.json")

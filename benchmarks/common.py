@@ -123,6 +123,19 @@ def calibrated_probe(workload: Callable[[], float], rounds: int = 4) -> float:
     return (w_ev / max(w_sec, 1e-9)) / (c_ops / max(c_sec, 1e-9))
 
 
+# replint verdict rows stamped into every artifact this process emits (set
+# once by benchmarks.run before any bench executes; None = unstamped, e.g.
+# a bench module run directly). check_regression refuses fresh artifacts
+# whose stamp says the tree had non-baseline lint findings — numbers from
+# a dirty tree must never become comparison baselines.
+_REPLINT_STAMP: "Optional[dict]" = None
+
+
+def set_replint_stamp(verdict: dict) -> None:
+    global _REPLINT_STAMP
+    _REPLINT_STAMP = dict(verdict)
+
+
 @dataclasses.dataclass
 class Row:
     bench: str
@@ -141,6 +154,14 @@ class Row:
 
 def emit(rows: list[Row], name: str) -> None:
     os.makedirs(ARTIFACTS, exist_ok=True)
+    if _REPLINT_STAMP is not None:
+        rows = rows + [
+            Row(name, "replint_clean",
+                1.0 if _REPLINT_STAMP.get("clean") else 0.0,
+                target="no non-baseline lint findings", unit="bool"),
+            Row(name, "replint_findings",
+                float(_REPLINT_STAMP.get("findings", 0)), unit="count"),
+        ]
     print(f"# --- {name} " + "-" * max(0, 60 - len(name)))
     print("bench,metric,value,unit,paper_target,verdict")
     for r in rows:

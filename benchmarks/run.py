@@ -29,7 +29,7 @@ from benchmarks import (bench_checkpoint, bench_detection, bench_diagnosis,
                         bench_evalsched, bench_moe_comm, bench_pool,
                         bench_recovery, bench_replay, bench_roofline,
                         bench_trace)
-from benchmarks.common import ARTIFACTS, emit
+from benchmarks.common import ARTIFACTS, emit, set_replint_stamp
 
 # benches whose calibrated throughput forms the consolidated trajectory
 TRAJECTORY_BENCHES = ("replay", "pool", "evalsched")
@@ -42,6 +42,31 @@ TRAJECTORY_EXTRAS = {
     "replay_full": ("replay", "events_per_calib_full"),
 }
 TRAJECTORY_BASELINE = os.path.join("artifacts", "bench", "BENCH_replay.json")
+
+# replint verdict for this run's tree; filled by main() before any bench
+# runs, stamped into every artifact row set (benchmarks.common.emit) and
+# the trajectory entry, and *gated* by check_regression — bench numbers
+# recorded from a lint-dirty tree must never become baselines
+_replint_verdict: dict | None = None
+
+
+def _stamp_replint() -> dict:
+    global _replint_verdict
+    try:
+        from repro.quality.lint import verdict
+        # anchored at the repo root so bench runs from any cwd lint the
+        # same tree (rule scoping matches on repro/-relative suffixes)
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        _replint_verdict = verdict((os.path.join(root, "src", "repro"),))
+    except Exception as exc:  # noqa: BLE001 - a broken linter must not
+        #                       kill the bench run; the stamp records it
+        _replint_verdict = {"clean": False, "findings": -1,
+                            "error": str(exc)}
+    set_replint_stamp(_replint_verdict)
+    state = "clean" if _replint_verdict.get("clean") else "DIRTY"
+    print(f"# replint: tree is {state} "
+          f"({_replint_verdict.get('findings', '?')} findings)")
+    return _replint_verdict
 
 
 def _run_label() -> str:
@@ -71,6 +96,8 @@ def write_trajectory(artifacts_dir: str = ARTIFACTS,
     partially-failed run can never relabel stale numbers as fresh."""
     entry: dict = {"label": label or _run_label(),
                    "date": time.strftime("%Y-%m-%d")}
+    if _replint_verdict is not None:
+        entry["replint_clean"] = bool(_replint_verdict.get("clean"))
     rows_by_bench: dict = {}
     for bench in TRAJECTORY_BENCHES:
         path = os.path.join(artifacts_dir, f"{bench}.json")
@@ -127,6 +154,7 @@ def main() -> None:
                     help="also run benchmarks.profile_replay (cProfile "
                          "hot-path table -> profile_replay.json)")
     args = ap.parse_args()
+    _stamp_replint()
     failures = []
     succeeded = []
     for name, mod in BENCHES.items():

@@ -198,6 +198,8 @@ class DiagnosisLoop:
     incidents into cheap rule hits.
     """
 
+    __slots__ = ("system", "n_variants", "_rng", "_cache", "incidents")
+
     def __init__(self, system: Optional[FailureDiagnosisSystem] = None, *,
                  n_variants: int = 32, seed: int = 0):
         self.system = system or FailureDiagnosisSystem()
@@ -498,7 +500,7 @@ class NodeLedger:
         return best
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class ReplayConfig:
     injector: Optional[FailureInjector] = None   # None = pure queue replay
     checkpoint_interval_min: float = 30.0        # §6.1 async ckpt cadence
@@ -543,14 +545,14 @@ class ReplayConfig:
     #                                               (PREEMPTION-class parity)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class ClassStats:
     failures: int = 0
     lost_gpu_min: float = 0.0        # rolled-back work x GPUs
     overhead_min: float = 0.0        # restart downtime (wall, not GPU-time)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class ReplayResult:
     jobs: list
     events_processed: int = 0

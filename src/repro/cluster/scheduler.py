@@ -32,10 +32,19 @@ HIGH_PRIORITY = ("pretrain", "sft", "mllm")
 NEVER_STARTED = math.inf
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class ReservationScheduler:
     total_gpus: int
     reserved_frac: float = 0.85     # quota held for pretraining-class jobs
+    # derived in __post_init__; declared (init/repr/compare-free, so the
+    # construction API and eq semantics are unchanged) because the class
+    # carries __slots__ — one instance sits on every replay hot path
+    reserved: int = dataclasses.field(init=False, repr=False, compare=False)
+    spare: int = dataclasses.field(init=False, repr=False, compare=False)
+    free_reserved: int = dataclasses.field(init=False, repr=False,
+                                           compare=False)
+    free_spare: int = dataclasses.field(init=False, repr=False,
+                                        compare=False)
 
     def __post_init__(self):
         self.reserved = int(self.total_gpus * self.reserved_frac)

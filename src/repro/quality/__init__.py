@@ -1,0 +1,30 @@
+"""replint — repo-native static analysis for the reproduction.
+
+Two rule families, one quality gate:
+
+* ``repro.quality.lint`` (``python -m repro.quality.lint PATH...``) —
+  AST-based determinism & engine-hygiene rules (``RPL0xx``) over the
+  library: unseeded RNG draws, set-iteration order escaping into ordered
+  sinks, wall-clock / ``id()`` ordering inside the replay engine, bare
+  ``print`` in library code, and ``__slots__`` enforcement in the declared
+  hot modules. Findings can be suppressed inline
+  (``# replint: disable=RPL001``) or grandfathered in the committed
+  baseline (``src/repro/quality/baseline.json``).
+
+* ``repro.quality.pallas_check`` (``python -m repro.quality.pallas_check``)
+  — imports the Pallas kernels *without a TPU* and statically verifies
+  every ``pl.pallas_call`` contract (``RPL1xx``): index_map arity vs grid
+  rank, block-shape rank/divisibility vs the operand, MXU 128-alignment of
+  trailing block dims, kernel-signature arity vs specs + scratch.
+
+Both are wired into the CI ``lint`` job (see ``.github/workflows/ci.yml``)
+and fail it on any non-baseline finding; the JSON reports land in
+``artifacts/lint/``. The replay engine's correctness story is bit-exact
+determinism (``tests/test_golden_summary.py``), so violations that would
+only surface as a mysterious golden-fixture diff are caught at lint time
+instead.
+
+(No eager re-exports: ``python -m repro.quality.lint`` must not find the
+submodule pre-imported by its own package — import ``repro.quality.lint``
+/ ``repro.quality.pallas_check`` directly.)
+"""

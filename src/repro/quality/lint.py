@@ -1,0 +1,241 @@
+"""``replint`` driver: file discovery, suppressions, baseline, report, CLI.
+
+Usage (what the CI ``lint`` job runs)::
+
+    PYTHONPATH=src python -m repro.quality.lint src/repro benchmarks \\
+        examples --report artifacts/lint/replint.json
+
+Exit 0 when every finding is suppressed or baselined, 1 otherwise, 2 on
+usage errors. See ``repro.quality.rules`` for the rule codes.
+
+Suppressions
+------------
+A finding is suppressed by a comment on its own line::
+
+    x = random.random()   # replint: disable=RPL001
+
+``disable=RPL001,RPL003`` suppresses several codes, bare ``disable``
+suppresses every rule on that line. Suppressions are counted in the report
+so they cannot accumulate silently.
+
+Baseline
+--------
+``src/repro/quality/baseline.json`` (committed) holds grandfathered
+findings as ``(path, code, stripped-source-line)`` fingerprints — stable
+across line drift, invalidated by edits to the offending statement.
+Non-baseline findings fail the run; stale baseline entries are reported so
+the file shrinks monotonically. Regenerate with ``--write-baseline`` (the
+tree this PR ships has an **empty** baseline — keep it that way).
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import os
+import re
+import sys
+from typing import Iterable, Optional
+
+from repro.quality.rules import RULES, Finding, lint_source
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*replint:\s*disable(?:=(?P<codes>[A-Z0-9,\s]+))?")
+
+# directories never worth descending into
+_SKIP_DIRS = frozenset(("__pycache__", ".git", ".github", "node_modules",
+                        ".venv", "venv"))
+
+
+def iter_py_files(paths: Iterable[str]) -> list[str]:
+    out: list[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs if d not in _SKIP_DIRS)
+                out.extend(os.path.join(root, f) for f in sorted(files)
+                           if f.endswith(".py"))
+        else:
+            raise FileNotFoundError(p)
+    # normalized repo-relative forward-slash paths keep fingerprints and
+    # rule scoping identical across machines and invocation directories
+    return [os.path.relpath(f).replace(os.sep, "/") for f in out]
+
+
+def _suppressed_codes(line: str) -> Optional[frozenset]:
+    """Codes disabled on ``line``; empty frozenset = all codes; None = no
+    suppression comment."""
+    m = _SUPPRESS_RE.search(line)
+    if not m:
+        return None
+    codes = m.group("codes")
+    if codes is None:
+        return frozenset()
+    return frozenset(c.strip() for c in codes.split(",") if c.strip())
+
+
+def lint_file(path: str) -> tuple[list[Finding], int]:
+    """Returns (unsuppressed findings, suppressed count) for one file."""
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    lines = source.splitlines()
+    kept: list[Finding] = []
+    n_suppressed = 0
+    for finding in lint_source(path, source):
+        raw = lines[finding.line - 1] if finding.line <= len(lines) else ""
+        codes = _suppressed_codes(raw)
+        if codes is not None and (not codes or finding.code in codes):
+            n_suppressed += 1
+        else:
+            kept.append(finding)
+    return kept, n_suppressed
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: str) -> collections.Counter:
+    """Multiset of grandfathered fingerprints (missing file = empty)."""
+    if not os.path.exists(path):
+        return collections.Counter()
+    with open(path, encoding="utf-8") as f:
+        entries = json.load(f)
+    return collections.Counter(
+        (e["path"], e["code"], e["snippet"]) for e in entries)
+
+
+def write_baseline(path: str, findings: list[Finding]) -> None:
+    entries = [{"path": f.path, "code": f.code, "snippet": f.snippet}
+               for f in findings]
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(entries, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def apply_baseline(findings: list[Finding], baseline: collections.Counter
+                   ) -> tuple[list[Finding], int, int]:
+    """Split ``findings`` against the baseline multiset. Returns
+    (new findings, n_baselined, n_stale_baseline_entries)."""
+    remaining = collections.Counter(baseline)
+    new: list[Finding] = []
+    n_baselined = 0
+    for f in findings:
+        fp = f.fingerprint()
+        if remaining.get(fp, 0) > 0:
+            remaining[fp] -= 1
+            n_baselined += 1
+        else:
+            new.append(f)
+    return new, n_baselined, sum(remaining.values())
+
+
+# ---------------------------------------------------------------------------
+# runs
+# ---------------------------------------------------------------------------
+
+def _collect(paths: Iterable[str]) -> tuple[list, list[Finding], int]:
+    files = iter_py_files(paths)
+    findings: list[Finding] = []
+    n_suppressed = 0
+    for path in files:
+        got, sup = lint_file(path)
+        findings.extend(got)
+        n_suppressed += sup
+    return files, findings, n_suppressed
+
+
+def _make_report(paths: Iterable[str], files: list, new: list[Finding],
+                 n_suppressed: int, n_baselined: int, n_stale: int) -> dict:
+    return {
+        "tool": "replint",
+        "rules": {code: summary for code, (summary, _) in RULES.items()},
+        "paths": list(paths),
+        "n_files": len(files),
+        "n_findings": len(new),
+        "n_suppressed": n_suppressed,
+        "n_baselined": n_baselined,
+        "n_stale_baseline": n_stale,
+        "clean": not new,
+        "findings": [{"code": f.code, "path": f.path, "line": f.line,
+                      "col": f.col, "message": f.message,
+                      "snippet": f.snippet} for f in new],
+    }
+
+
+def run_lint(paths: Iterable[str], *,
+             baseline_path: str = DEFAULT_BASELINE) -> dict:
+    """Lint ``paths``; returns the JSON-ready report dict. ``clean`` is
+    True when no finding survives suppressions + baseline."""
+    files, findings, n_suppressed = _collect(paths)
+    new, n_baselined, n_stale = apply_baseline(
+        findings, load_baseline(baseline_path))
+    return _make_report(paths, files, new, n_suppressed, n_baselined,
+                        n_stale)
+
+
+def verdict(paths: Iterable[str] = ("src/repro",)) -> dict:
+    """Compact verdict for stamping into bench artifacts (see
+    ``benchmarks/run.py`` / ``check_regression.py``): bench numbers from a
+    tree with non-baseline lint findings must not become baselines."""
+    report = run_lint(paths)
+    return {"clean": report["clean"], "findings": report["n_findings"],
+            "baselined": report["n_baselined"]}
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.quality.lint",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+", help="files/directories to lint")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="grandfathered-findings file (default: the "
+                         "committed package baseline)")
+    ap.add_argument("--report", default=None,
+                    help="write the JSON report here (e.g. "
+                         "artifacts/lint/replint.json)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate --baseline from the current findings "
+                         "and exit 0 (each entry must be justified in the "
+                         "PR that commits it)")
+    args = ap.parse_args(argv)
+
+    try:
+        files, findings, n_suppressed = _collect(args.paths)
+    except FileNotFoundError as exc:
+        print(f"replint: no such path: {exc}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        write_baseline(args.baseline, findings)
+        print(f"replint: wrote {len(findings)} baseline entries to "
+              f"{args.baseline}")
+        return 0
+
+    new, n_baselined, n_stale = apply_baseline(
+        findings, load_baseline(args.baseline))
+    for f in new:
+        print(f.render())
+    if n_stale:
+        print(f"replint: {n_stale} stale baseline entries (fixed or "
+              f"edited findings) — regenerate with --write-baseline")
+
+    if args.report:
+        report = _make_report(args.paths, files, new, n_suppressed,
+                              n_baselined, n_stale)
+        os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
+        with open(args.report, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=1)
+            f.write("\n")
+
+    print(f"replint: {len(files)} files, {len(new)} findings "
+          f"({n_suppressed} suppressed, {n_baselined} baselined)")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

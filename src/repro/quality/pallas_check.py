@@ -1,0 +1,330 @@
+"""Static Pallas ``pallas_call`` contract checker (``RPL1xx`` family).
+
+The three kernels (``flash_attention`` / ``rmsnorm`` / ``ssd``) encode
+their BlockSpec/grid/index_map contracts in code that nothing verifies
+until a TPU run fails — and the dev boxes here have no TPU. This module
+imports each kernel *without executing it*: ``pl.pallas_call`` is swapped
+for a capturing stub, the kernel entry point is traced with small
+shape-representative dummy operands, and every captured call is checked
+statically:
+
+``RPL101``  index_map arity != grid rank, or its returned block-index
+            tuple's length != the block-shape rank
+``RPL102``  block-shape rank != operand rank
+``RPL103``  a block dim does not divide the operand dim (this repo's
+            kernels assert divisibility — ops.py pads — so a non-divisor
+            block is always a bug here, not an implicit-padding request)
+``RPL104``  trailing block dim is MXU-misaligned: neither 1 (scalar-ish
+            lane), a multiple of 128 (the MXU/VPU lane width — see the
+            Pallas TPU tiling table), nor the full operand dim (whole-axis
+            blocks, e.g. a resident reduction axis)
+``RPL105``  kernel signature arity != n_inputs + n_outputs + n_scratch
+            (after ``functools.partial`` binding)
+
+Run over the shipped kernels (what CI does)::
+
+    PYTHONPATH=src python -m repro.quality.pallas_check \\
+        --report artifacts/lint/pallas_check.json
+
+Exit 0 when every kernel passes, 1 otherwise. The unit fixtures
+(``tests/fixtures/pallas_broken.py``) are deliberately broken kernels the
+checker must flag — the test that the checker itself cannot rot.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import dataclasses
+import functools
+import inspect
+import json
+import os
+import sys
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.quality.rules import Finding
+
+MXU_LANE = 128
+
+
+@dataclasses.dataclass
+class CapturedCall:
+    """One intercepted ``pl.pallas_call``: the static contract plus the
+    operand avals it was applied to."""
+    __slots__ = ("kernel", "grid", "in_specs", "out_specs", "out_shape",
+                 "scratch_shapes", "operands")
+    kernel: Callable
+    grid: tuple
+    in_specs: list
+    out_specs: list
+    out_shape: list
+    scratch_shapes: list
+    operands: list          # jax.ShapeDtypeStruct per input
+
+
+class _CapturingPallasCall:
+    """Stand-in for ``pl.pallas_call``: records the call contract and
+    returns zeros of ``out_shape`` instead of lowering — so kernels are
+    checkable on hosts with no TPU and without running interpret mode."""
+
+    def __init__(self):
+        self.calls: list[CapturedCall] = []
+
+    def __call__(self, kernel, *, grid=None, in_specs=None, out_specs=None,
+                 out_shape=None, scratch_shapes=(), grid_spec=None,
+                 **_kwargs):
+        if grid_spec is not None:     # pragma: no cover - none shipped yet
+            grid = getattr(grid_spec, "grid", grid)
+            in_specs = getattr(grid_spec, "in_specs", in_specs)
+            out_specs = getattr(grid_spec, "out_specs", out_specs)
+        multi_out = isinstance(out_shape, (list, tuple))
+        out_list = list(out_shape) if multi_out else [out_shape]
+
+        def bound(*operands):
+            self.calls.append(CapturedCall(
+                kernel=kernel,
+                grid=tuple(grid) if grid is not None else (),
+                in_specs=list(in_specs) if in_specs is not None else [],
+                out_specs=(list(out_specs)
+                           if isinstance(out_specs, (list, tuple))
+                           else [out_specs]),
+                out_shape=out_list,
+                scratch_shapes=list(scratch_shapes),
+                operands=[jax.ShapeDtypeStruct(o.shape, o.dtype)
+                          for o in operands]))
+            outs = [jnp.zeros(s.shape, s.dtype) for s in out_list]
+            return outs if multi_out else outs[0]
+
+        return bound
+
+
+@contextlib.contextmanager
+def capture_pallas_calls():
+    """Swap ``pl.pallas_call`` for the capturing stub (restored on exit).
+    The kernels resolve ``pl.pallas_call`` at call time through the module
+    object, so patching the attribute intercepts them without reimports."""
+    stub = _CapturingPallasCall()
+    original = pl.pallas_call
+    pl.pallas_call = stub
+    try:
+        yield stub
+    finally:
+        pl.pallas_call = original
+
+
+# ---------------------------------------------------------------------------
+# checks over one captured call
+# ---------------------------------------------------------------------------
+
+def _positional_arity(fn: Callable) -> Optional[int]:
+    """Positional (ref) parameters a kernel body accepts, after unwrapping
+    ``functools.partial`` keyword binding; None when it takes *args."""
+    n_bound = 0
+    while isinstance(fn, functools.partial):
+        n_bound += len(fn.args)
+        fn = fn.func
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):  # pragma: no cover - builtins
+        return None
+    n = 0
+    for p in sig.parameters.values():
+        if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD):
+            n += 1
+        elif p.kind == p.VAR_POSITIONAL:
+            return None
+    return n - n_bound
+
+
+def _index_map_arity(spec) -> Optional[int]:
+    imap = getattr(spec, "index_map", None)
+    if imap is None:
+        return None
+    try:
+        return len(inspect.signature(imap).parameters)
+    except (TypeError, ValueError):  # pragma: no cover
+        return None
+
+
+def _check_spec(findings: list, where: str, path: str, spec,
+                aval, grid: tuple) -> None:
+    """All BlockSpec-vs-operand checks for one (spec, aval) pair."""
+    def emit(code: str, message: str) -> None:
+        findings.append(Finding(code=code, path=path, line=0, col=0,
+                                message=f"{where}: {message}",
+                                snippet=where))
+
+    block = getattr(spec, "block_shape", None)
+    if block is None:
+        return                      # whole-operand spec: nothing to check
+    block = tuple(block)
+
+    arity = _index_map_arity(spec)
+    if arity is not None and arity != len(grid):
+        emit("RPL101", f"index_map takes {arity} args but the grid has "
+             f"rank {len(grid)} — every grid axis must reach the map")
+        return                      # calling it below would TypeError
+
+    if len(block) != len(aval.shape):
+        emit("RPL102", f"block shape {block} has rank {len(block)} but "
+             f"the operand is rank {len(aval.shape)} {tuple(aval.shape)}")
+        return                      # per-dim checks are meaningless now
+
+    imap = getattr(spec, "index_map", None)
+    if imap is not None and arity == len(grid):
+        idx = imap(*([0] * len(grid)))
+        if not isinstance(idx, tuple):
+            idx = (idx,)
+        if len(idx) != len(block):
+            emit("RPL101", f"index_map returns {len(idx)} block indices "
+                 f"but the block shape {block} has rank {len(block)}")
+
+    for d, (b, full) in enumerate(zip(block, aval.shape)):
+        if b is None:               # None = whole axis, always legal
+            continue
+        if not isinstance(b, int) or b <= 0:
+            emit("RPL103", f"dim {d}: block size {b!r} is not a positive "
+                 "int")
+        elif full % b != 0:
+            emit("RPL103", f"dim {d}: block size {b} does not divide the "
+                 f"operand dim {full} (ops.py pads to the contract; a "
+                 "non-divisor block silently reads OOB-padded garbage)")
+
+    last = block[-1]
+    if (isinstance(last, int) and last > 1 and last % MXU_LANE != 0
+            and last != aval.shape[-1]):
+        emit("RPL104", f"trailing block dim {last} is MXU-misaligned: "
+             f"not 1, not a multiple of {MXU_LANE}, and not the whole "
+             f"operand dim {aval.shape[-1]} — the lane axis would be "
+             "re-tiled with padding on every block")
+
+
+def check_call(call: CapturedCall, path: str) -> list[Finding]:
+    """Statically verify one captured ``pallas_call`` contract."""
+    findings: list[Finding] = []
+    grid = call.grid
+
+    for i, (spec, aval) in enumerate(zip(call.in_specs, call.operands)):
+        _check_spec(findings, f"in_specs[{i}]", path, spec, aval, grid)
+    for i, (spec, shape) in enumerate(zip(call.out_specs, call.out_shape)):
+        _check_spec(findings, f"out_specs[{i}]", path, spec, shape, grid)
+
+    if len(call.in_specs) != len(call.operands):
+        findings.append(Finding(
+            code="RPL105", path=path, line=0, col=0,
+            message=f"{len(call.in_specs)} in_specs for "
+                    f"{len(call.operands)} operands", snippet="in_specs"))
+
+    expected = (len(call.operands) + len(call.out_shape)
+                + len(call.scratch_shapes))
+    arity = _positional_arity(call.kernel)
+    if arity is not None and arity != expected:
+        findings.append(Finding(
+            code="RPL105", path=path, line=0, col=0,
+            message=f"kernel body takes {arity} refs but the call wires "
+                    f"{len(call.operands)} inputs + {len(call.out_shape)} "
+                    f"outputs + {len(call.scratch_shapes)} scratch = "
+                    f"{expected}", snippet="kernel arity"))
+
+    for i, scratch in enumerate(call.scratch_shapes):
+        shape = getattr(scratch, "shape", None)
+        if shape is not None and any(
+                (not isinstance(d, int)) or d <= 0 for d in shape):
+            findings.append(Finding(
+                code="RPL103", path=path, line=0, col=0,
+                message=f"scratch_shapes[{i}]: non-positive dim in "
+                        f"{tuple(shape)}", snippet=f"scratch[{i}]"))
+    return findings
+
+
+def check_traced(trace: Callable[[], Any], path: str) -> list[Finding]:
+    """Run ``trace`` (a thunk invoking kernel entry points) under the
+    capturing stub and check every ``pallas_call`` it makes."""
+    with capture_pallas_calls() as stub:
+        trace()
+    findings: list[Finding] = []
+    for call in stub.calls:
+        findings.extend(check_call(call, path))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# the shipped kernels
+# ---------------------------------------------------------------------------
+
+def _trace_flash_attention() -> None:
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+    B, H, KV, S, D = 1, 4, 2, 256, 128
+    q = jnp.zeros((B, H, S, D), jnp.float32)
+    k = jnp.zeros((B, KV, S, D), jnp.float32)
+    pos = jnp.zeros((B, S), jnp.int32)
+    flash_attention_pallas(q, k, k, pos, pos, causal=True, window=64,
+                           softcap=30.0)
+
+
+def _trace_rmsnorm() -> None:
+    from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+    rows, d = 256, 512
+    rmsnorm_pallas(jnp.zeros((rows, d), jnp.float32),
+                   jnp.zeros((d,), jnp.float32))
+
+
+def _trace_ssd() -> None:
+    from repro.kernels.ssd.kernel import ssd_pallas
+    B, L, H, P, G, N = 1, 256, 4, 64, 2, 32
+    ssd_pallas(jnp.zeros((B, L, H, P), jnp.float32),
+               jnp.zeros((B, L, H), jnp.float32),
+               jnp.zeros((H,), jnp.float32),
+               jnp.zeros((B, L, G, N), jnp.float32),
+               jnp.zeros((B, L, G, N), jnp.float32))
+
+
+SHIPPED_KERNELS: dict[str, Callable[[], None]] = {
+    "src/repro/kernels/flash_attention/kernel.py": _trace_flash_attention,
+    "src/repro/kernels/rmsnorm/kernel.py": _trace_rmsnorm,
+    "src/repro/kernels/ssd/kernel.py": _trace_ssd,
+}
+
+
+def check_shipped() -> list[Finding]:
+    findings: list[Finding] = []
+    for path, trace in SHIPPED_KERNELS.items():
+        findings.extend(check_traced(trace, path))
+    return findings
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.quality.pallas_check",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("--report", default=None,
+                    help="write the JSON report here (e.g. "
+                         "artifacts/lint/pallas_check.json)")
+    args = ap.parse_args(argv)
+    findings = check_shipped()
+    for f in findings:
+        print(f"{f.path}: {f.code} {f.message}")
+    if args.report:
+        report = {
+            "tool": "replint.pallas_check",
+            "kernels": list(SHIPPED_KERNELS),
+            "n_findings": len(findings),
+            "clean": not findings,
+            "findings": [{"code": f.code, "path": f.path,
+                          "message": f.message} for f in findings],
+        }
+        os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
+        with open(args.report, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=1)
+            f.write("\n")
+    n = len(SHIPPED_KERNELS)
+    print(f"pallas_check: {n} kernels, {len(findings)} findings")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

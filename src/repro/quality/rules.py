@@ -1,0 +1,349 @@
+"""AST rules for ``replint`` (the ``RPL0xx`` determinism/hygiene family).
+
+Every rule exists because the replay engine's correctness contract is
+*bit-exact determinism*: the golden-summary fixtures pin the full summary
+tree of 50k-job traces, and PR 5's hot-path rewrite was only committable
+because RNG streams and float-op order were provably unchanged. The
+failure mode these rules guard against is not a crash — it is a mysterious
+golden-fixture diff three PRs later.
+
+Rule codes
+----------
+``RPL000``  file does not parse (syntax error)
+``RPL001``  unseeded RNG: module-level ``random.*`` / ``np.random.*``
+            draws, unseeded ``random.Random()`` / ``np.random.default_rng()``
+            construction, or global ``seed()`` calls — every drawing
+            function must thread an explicit seeded generator
+``RPL002``  set-iteration order escaping into an ordered sink (``for``
+            over a set expression, ``list()`` / ``tuple()`` / ``enumerate``
+            of one, a set expression inside a ``heappush`` payload, or an
+            ordered comprehension over one); wrap in ``sorted(...)``
+``RPL003``  wall-clock (``time.time`` / ``perf_counter`` / ``datetime.now``
+            ...) or ``id()`` ordering inside declared engine modules —
+            simulation time is event time, and ``id()`` varies run-to-run
+``RPL004``  bare ``print()`` in library code (use ``repro.utils.logger``)
+``RPL005``  class in a declared hot module without ``__slots__`` (plain
+            body declaration or ``@dataclass(slots=True)``)
+
+Scoping: which paths a rule applies to is decided here (path predicates),
+not by the caller — ``benchmarks/`` may print, only engine modules are
+held to the wall-clock rule, only hot modules to ``__slots__``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Optional
+
+# ---------------------------------------------------------------------------
+# findings
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation. ``snippet`` (the stripped source line) is the
+    baseline fingerprint component, so grandfathered findings survive line
+    drift but not edits to the offending statement."""
+    __slots__ = ("code", "path", "line", "col", "message", "snippet")
+    code: str
+    path: str          # repo-relative, forward slashes
+    line: int
+    col: int
+    message: str
+    snippet: str
+
+    def fingerprint(self) -> tuple:
+        return (self.path, self.code, self.snippet)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# path scoping
+# ---------------------------------------------------------------------------
+
+def _in_library(path: str) -> bool:
+    return "repro/" in path and "/quality/" not in path
+
+
+def _in_engine(path: str) -> bool:
+    # the event-driven simulation core: all of cluster/, plus the evalsched
+    # pieces that run inside the replay loop (coordinator/trial/simulator —
+    # runner.py measures real eval-stage wall time on purpose)
+    if "repro/cluster/" in path:
+        return True
+    return any(path.endswith(m) for m in (
+        "repro/core/evalsched/coordinator.py",
+        "repro/core/evalsched/trial.py",
+        "repro/core/evalsched/simulator.py"))
+
+
+def _in_hot(path: str) -> bool:
+    return path.endswith(("repro/cluster/replay.py",
+                          "repro/cluster/scheduler.py"))
+
+
+def _anywhere(path: str) -> bool:
+    return True
+
+
+# code -> (one-line summary, path predicate)
+RULES: dict[str, tuple[str, Callable[[str], bool]]] = {
+    "RPL000": ("file does not parse", _anywhere),
+    "RPL001": ("unseeded module-level RNG draw", _anywhere),
+    "RPL002": ("set-iteration order escapes into an ordered sink",
+               _anywhere),
+    "RPL003": ("wall-clock/id() ordering in engine code", _in_engine),
+    "RPL004": ("print() in library code", _in_library),
+    "RPL005": ("record class in hot module lacks __slots__", _in_hot),
+}
+
+# ---------------------------------------------------------------------------
+# RPL001 tables
+# ---------------------------------------------------------------------------
+
+# stdlib ``random`` module-level functions that draw from (or reseed) the
+# hidden global Mersenne Twister
+_PY_DRAWS = frozenset((
+    "random", "randint", "randrange", "uniform", "choice", "choices",
+    "shuffle", "sample", "gauss", "normalvariate", "lognormvariate",
+    "expovariate", "betavariate", "gammavariate", "paretovariate",
+    "vonmisesvariate", "weibullvariate", "triangular", "getrandbits",
+    "randbytes", "seed",
+))
+
+# legacy ``numpy.random`` module-level API (the hidden global RandomState)
+_NP_DRAWS = frozenset((
+    "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "uniform", "choice", "shuffle", "permutation", "normal",
+    "standard_normal", "exponential", "poisson", "beta", "gamma",
+    "binomial", "lognormal", "geometric", "bytes", "seed",
+))
+
+# constructors that are fine *seeded* but violations bare
+_GENERATORS = frozenset((
+    "random.Random", "random.SystemRandom",
+    "numpy.random.default_rng", "numpy.random.RandomState",
+))
+
+_WALL_CLOCK = frozenset((
+    "time.time", "time.time_ns", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+    "time.process_time", "time.process_time_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+))
+
+_SLOTS_EXEMPT_BASES = frozenset((
+    "Enum", "IntEnum", "StrEnum", "Flag", "NamedTuple", "Protocol",
+    "TypedDict", "ABC",
+))
+
+_ORDERED_SINKS = frozenset(("list", "tuple", "enumerate", "iter",
+                            "reversed"))
+
+
+# ---------------------------------------------------------------------------
+# the visitor
+# ---------------------------------------------------------------------------
+
+def _is_set_expr(node: ast.AST) -> bool:
+    """Syntactically set-valued: a set literal, a set comprehension, or a
+    direct ``set(...)`` / ``frozenset(...)`` call. (Variables that *hold*
+    sets need type inference; this rule is deliberately syntactic — the
+    fixture corpus and the engine's own history show the direct forms are
+    where the leaks happen.)"""
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    return (isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id in ("set", "frozenset"))
+
+
+class _RuleVisitor(ast.NodeVisitor):
+    def __init__(self, path: str, src_lines: list[str]):
+        self.path = path
+        self.lines = src_lines
+        self.findings: list[Finding] = []
+        # alias -> canonical dotted module/name ("np" -> "numpy",
+        # "randint" -> "random.randint"); module-level only, which covers
+        # the idiomatic import styles the repo uses
+        self.aliases: dict[str, str] = {}
+        self.active = {code for code, (_, applies) in RULES.items()
+                       if applies(path)}
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _emit(self, code: str, node: ast.AST, message: str) -> None:
+        if code not in self.active:
+            return
+        line = getattr(node, "lineno", 1)
+        snippet = (self.lines[line - 1].strip()
+                   if 0 < line <= len(self.lines) else "")
+        self.findings.append(Finding(
+            code=code, path=self.path, line=line,
+            col=getattr(node, "col_offset", 0) + 1,
+            message=message, snippet=snippet))
+
+    def _canonical(self, node: ast.AST) -> Optional[str]:
+        """Resolve ``np.random.default_rng`` -> ``numpy.random.default_rng``
+        through the module's import aliases; None for non-name chains or
+        chains rooted at a local variable."""
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        head = self.aliases.get(node.id)
+        if head is None:
+            return None
+        parts.append(head)
+        return ".".join(reversed(parts))
+
+    # -- imports ------------------------------------------------------------
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            self.aliases[a.asname or a.name.split(".")[0]] = (
+                a.name if a.asname else a.name.split(".")[0])
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module and node.level == 0:
+            for a in node.names:
+                self.aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+        self.generic_visit(node)
+
+    # -- RPL001 / RPL003 / RPL004: calls ------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = self._canonical(node.func)
+        if name:
+            last = name.rsplit(".", 1)[-1]
+            if name == f"random.{last}" and last in _PY_DRAWS:
+                self._emit("RPL001", node,
+                           f"module-level random.{last}() draws from the "
+                           "hidden global RNG; thread an explicit seeded "
+                           "random.Random")
+            elif (name.startswith("numpy.random.") and last in _NP_DRAWS
+                  and name == f"numpy.random.{last}"):
+                self._emit("RPL001", node,
+                           f"module-level np.random.{last}() draws from "
+                           "the hidden global RandomState; thread an "
+                           "explicit np.random.Generator")
+            elif (name in _GENERATORS and not node.args
+                  and not any(kw.arg in ("seed", "x") for kw in
+                              node.keywords)):
+                self._emit("RPL001", node,
+                           f"{name}() without a seed is entropy-seeded; "
+                           "pass an explicit seed")
+            elif name in _WALL_CLOCK:
+                self._emit("RPL003", node,
+                           f"{name}() in engine code: simulation time is "
+                           "event time, wall-clock reads are "
+                           "nondeterministic")
+        if isinstance(node.func, ast.Name):
+            fid = node.func.id
+            if fid == "print" and fid not in self.aliases:
+                self._emit("RPL004", node,
+                           "print() in library code; use repro.utils.logger")
+            elif (fid == "id" and fid not in self.aliases and node.args):
+                self._emit("RPL003", node,
+                           "id() in engine code: CPython addresses vary "
+                           "run-to-run, any ordering built on them is "
+                           "nondeterministic")
+            elif fid in _ORDERED_SINKS and any(
+                    _is_set_expr(a) for a in node.args):
+                self._emit("RPL002", node,
+                           f"{fid}() over a set expression materializes "
+                           "nondeterministic iteration order; use "
+                           "sorted(...)")
+        # heappush((..., set_expr, ...)) — a set leaking into heap order
+        if (name in ("heapq.heappush", "heapq.heappushpop", "heapq.merge")
+                or (isinstance(node.func, ast.Name)
+                    and self.aliases.get(node.func.id, "").startswith(
+                        "heapq."))):
+            for a in ast.walk(node):
+                if a is not node and _is_set_expr(a):
+                    self._emit("RPL002", node,
+                               "set expression inside a heap push: set "
+                               "order leaks into event order")
+                    break
+        self.generic_visit(node)
+
+    # -- RPL002: ordered iteration over set expressions ---------------------
+
+    def visit_For(self, node: ast.For) -> None:
+        if _is_set_expr(node.iter):
+            self._emit("RPL002", node,
+                       "for-loop over a set expression iterates in "
+                       "nondeterministic order; use sorted(...)")
+        self.generic_visit(node)
+
+    def _check_comp(self, node) -> None:
+        for gen in node.generators:
+            if _is_set_expr(gen.iter):
+                self._emit("RPL002", gen.iter,
+                           "ordered comprehension over a set expression; "
+                           "use sorted(...)")
+        self.generic_visit(node)
+
+    # SetComp is exempt: set-in, set-out — no order escapes
+    visit_ListComp = _check_comp
+    visit_GeneratorExp = _check_comp
+    visit_DictComp = _check_comp
+
+    # -- RPL005: __slots__ in hot modules -----------------------------------
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        if "RPL005" in self.active:
+            self._check_slots(node)
+        self.generic_visit(node)
+
+    def _check_slots(self, node: ast.ClassDef) -> None:
+        for base in node.bases:
+            tail = base.attr if isinstance(base, ast.Attribute) else (
+                base.id if isinstance(base, ast.Name) else "")
+            if (tail in _SLOTS_EXEMPT_BASES or tail.endswith("Exception")
+                    or tail.endswith("Error")):
+                return
+        for stmt in node.body:
+            targets = stmt.targets if isinstance(stmt, ast.Assign) else (
+                [stmt.target] if isinstance(stmt, ast.AnnAssign) else [])
+            for t in targets:
+                if isinstance(t, ast.Name) and t.id == "__slots__":
+                    return
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call):
+                for kw in dec.keywords:
+                    if (kw.arg == "slots"
+                            and isinstance(kw.value, ast.Constant)
+                            and kw.value.value is True):
+                        return
+        self._emit("RPL005", node,
+                   f"class {node.name} in a declared hot module has no "
+                   "__slots__ (add one, or @dataclass(slots=True)); "
+                   "instance dicts cost the engine's record-heavy paths")
+
+
+def lint_source(path: str, source: str) -> list[Finding]:
+    """Run every applicable rule over one file's source; returns raw
+    findings (suppressions and the baseline are the caller's job —
+    ``repro.quality.lint``)."""
+    lines = source.splitlines()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        return [Finding(code="RPL000", path=path, line=exc.lineno or 1,
+                        col=(exc.offset or 0) + 1,
+                        message=f"syntax error: {exc.msg}",
+                        snippet=(lines[exc.lineno - 1].strip()
+                                 if exc.lineno and
+                                 exc.lineno <= len(lines) else ""))]
+    visitor = _RuleVisitor(path, lines)
+    visitor.visit(tree)
+    visitor.findings.sort(key=lambda f: (f.line, f.col, f.code))
+    return visitor.findings

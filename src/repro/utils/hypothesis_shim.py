@@ -21,7 +21,7 @@ runner, not a replacement. Tests must restrict themselves to:
     settings(max_examples=, deadline=, ...)
     assume(condition)
     strategies.integers / floats / booleans / sampled_from / lists /
-               tuples / sets / just / data
+               tuples / sets / just / data / one_of / text / dictionaries
 """
 from __future__ import annotations
 
@@ -120,6 +120,61 @@ def sets(elements: SearchStrategy, *, min_size: int = 0,
         return out
 
     return SearchStrategy(draw, "sets")
+
+
+def one_of(*strategies: SearchStrategy) -> SearchStrategy:
+    """Uniform choice over branch strategies (the shim has no shrinking,
+    so there is no bias toward earlier branches like real hypothesis)."""
+    if not strategies:
+        raise ValueError("one_of requires at least one strategy")
+
+    def draw(rng: random.Random) -> Any:
+        return strategies[rng.randrange(len(strategies))].do_draw(rng)
+
+    return SearchStrategy(draw, f"one_of({len(strategies)})")
+
+
+_DEFAULT_ALPHABET = ("abcdefghijklmnopqrstuvwxyz"
+                     "ABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_")
+
+
+def text(alphabet: Any = _DEFAULT_ALPHABET, *, min_size: int = 0,
+         max_size: Optional[int] = None) -> SearchStrategy:
+    """Strings over ``alphabet`` (a string/sequence of characters, or a
+    SearchStrategy drawing single characters)."""
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rng: random.Random) -> str:
+        n = rng.randint(min_size, hi)
+        if isinstance(alphabet, SearchStrategy):
+            return "".join(str(alphabet.do_draw(rng)) for _ in range(n))
+        chars = list(alphabet)
+        if not chars:
+            if min_size > 0:
+                raise ValueError("empty alphabet with min_size > 0")
+            return ""
+        return "".join(rng.choice(chars) for _ in range(n))
+
+    return SearchStrategy(draw, f"text(min={min_size},max={hi})")
+
+
+def dictionaries(keys: SearchStrategy, values: SearchStrategy, *,
+                 min_size: int = 0,
+                 max_size: Optional[int] = None) -> SearchStrategy:
+    """Dicts with drawn keys/values. Like :func:`sets`, the key domain may
+    be smaller than the requested size, so draw attempts are bounded."""
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rng: random.Random) -> dict:
+        target = rng.randint(min_size, hi)
+        out: dict = {}
+        for _ in range(max(20 * (target + 1), 50)):
+            if len(out) >= target:
+                break
+            out[keys.do_draw(rng)] = values.do_draw(rng)
+        return out
+
+    return SearchStrategy(draw, "dictionaries")
 
 
 class DataObject:
@@ -231,7 +286,8 @@ def install(force: bool = False) -> bool:
             pass
     strategies = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "floats", "booleans", "just", "sampled_from",
-                 "lists", "tuples", "sets", "data", "SearchStrategy"):
+                 "lists", "tuples", "sets", "data", "one_of", "text",
+                 "dictionaries", "SearchStrategy"):
         setattr(strategies, name, globals()[name])
     hyp = types.ModuleType("hypothesis")
     hyp.__doc__ = __doc__

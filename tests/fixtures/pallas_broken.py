@@ -1,0 +1,69 @@
+"""Deliberately broken Pallas kernels for ``repro.quality.pallas_check``.
+
+Each ``bad_*`` thunk makes exactly one ``pl.pallas_call`` violating exactly
+one contract the checker must flag (the code in the name's comment);
+``good_control`` is a correct call the checker must pass. The thunks are
+only ever traced under ``capture_pallas_calls()`` — the kernel bodies
+never execute, so they are minimal no-ops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_X = (256, 256)          # operand shape shared by the fixtures
+
+
+def _noop2(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _call(in_spec, out_spec, grid, kernel=_noop2, scratch=()):
+    x = jnp.zeros(_X, jnp.float32)
+    return pl.pallas_call(
+        kernel, grid=grid, in_specs=[in_spec], out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(_X, jnp.float32),
+        scratch_shapes=list(scratch), interpret=True)(x)
+
+
+def good_control():
+    spec = pl.BlockSpec((128, 256), lambda i: (i, 0))
+    _call(spec, spec, grid=(2,))
+
+
+def bad_index_map_arity():     # RPL101: 2D grid, 1-arg index_map
+    spec = pl.BlockSpec((128, 128), lambda i: (i, 0))
+    good = pl.BlockSpec((128, 128), lambda i, j: (i, j))
+    _call(spec, good, grid=(2, 2))
+
+
+def bad_index_map_rank():      # RPL101: map yields 1 index for a 2D block
+    spec = pl.BlockSpec((128, 256), lambda i: (i,))
+    good = pl.BlockSpec((128, 256), lambda i: (i, 0))
+    _call(spec, good, grid=(2,))
+
+
+def bad_block_rank():          # RPL102: 1D block over a 2D operand
+    spec = pl.BlockSpec((128,), lambda i: (i,))
+    good = pl.BlockSpec((128, 256), lambda i: (i, 0))
+    _call(spec, good, grid=(2,))
+
+
+def bad_divisibility():        # RPL103: 100 does not divide 256
+    spec = pl.BlockSpec((100, 256), lambda i: (i, 0))
+    good = pl.BlockSpec((128, 256), lambda i: (i, 0))
+    _call(spec, good, grid=(2,))
+
+
+def bad_alignment():           # RPL104: trailing 32: not 1/128k/whole-dim
+    spec = pl.BlockSpec((256, 32), lambda i: (0, i))
+    good = pl.BlockSpec((256, 128), lambda i: (0, i))
+    _call(spec, good, grid=(2,))
+
+
+def bad_kernel_arity():        # RPL105: scratch wired but no scratch ref
+    spec = pl.BlockSpec((128, 256), lambda i: (i, 0))
+    _call(spec, spec, grid=(2,),
+          scratch=[pltpu.VMEM((128, 128), jnp.float32)])

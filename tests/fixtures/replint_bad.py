@@ -1,0 +1,45 @@
+"""Known-bad corpus for ``replint`` (never imported — linted by path).
+
+``tests/test_replint.py::test_bad_corpus_fails_cli`` runs the CLI over
+this file with a fake engine path and asserts a non-zero exit plus one
+finding per EXPECT comment. CI's lint job does NOT lint ``tests/``, so
+this corpus cannot trip the build it exists to protect.
+"""
+import heapq
+import random
+import time
+
+import numpy as np
+
+
+def unseeded_draws(xs):
+    a = random.random()                       # EXPECT RPL001
+    random.shuffle(xs)                        # EXPECT RPL001
+    b = np.random.randint(0, 5)               # EXPECT RPL001
+    rng = random.Random()                     # EXPECT RPL001
+    gen = np.random.default_rng()             # EXPECT RPL001
+    return a, b, rng, gen
+
+
+def order_leaks(h, ys):
+    for x in {1, 2, 3}:                       # EXPECT RPL002
+        pass
+    xs = list(set(ys))                        # EXPECT RPL002
+    heapq.heappush(h, (0.0, frozenset(ys)))   # EXPECT RPL002
+    return xs
+
+
+def wall_clock_ordering(events):
+    t = time.perf_counter()                   # EXPECT RPL003
+    events.sort(key=lambda e: id(e))          # EXPECT RPL003
+    print("tick", t)                          # EXPECT RPL004
+    return events
+
+
+class EventRecord:                            # EXPECT RPL005
+    def __init__(self, t):
+        self.t = t
+
+
+def suppressed_is_not_counted():
+    return random.random()  # replint: disable=RPL001

@@ -1,0 +1,200 @@
+"""Tests for ``repro.quality.pallas_check`` — the static BlockSpec/grid
+checker must pass every shipped kernel and flag every deliberately broken
+fixture in ``tests/fixtures/pallas_broken.py`` with exactly its code.
+
+Everything here runs under the capturing stub: no TPU, no interpret-mode
+execution — the kernels are traced, never lowered.
+"""
+import sys
+from pathlib import Path
+
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from jax.experimental import pallas as pl  # noqa: E402
+
+from repro.quality import pallas_check as pc  # noqa: E402
+
+FIXTURES = Path(__file__).resolve().parent / "fixtures"
+
+
+def _fixtures():
+    if str(FIXTURES) not in sys.path:
+        sys.path.insert(0, str(FIXTURES))
+    import pallas_broken
+    return pallas_broken
+
+
+def _codes(trace) -> list[str]:
+    return sorted(f.code for f in pc.check_traced(trace, "fixture.py"))
+
+
+# ---------------------------------------------------------------------------
+# the capturing stub
+# ---------------------------------------------------------------------------
+
+def test_capture_restores_pallas_call():
+    original = pl.pallas_call
+    with pc.capture_pallas_calls() as stub:
+        assert pl.pallas_call is stub
+    assert pl.pallas_call is original
+    # restored even when the traced thunk raises
+    with pytest.raises(RuntimeError):
+        with pc.capture_pallas_calls():
+            raise RuntimeError("boom")
+    assert pl.pallas_call is original
+
+
+def test_capture_records_contract_without_lowering():
+    mod = _fixtures()
+    with pc.capture_pallas_calls() as stub:
+        mod.good_control()
+    (call,) = stub.calls
+    assert call.grid == (2,)
+    assert len(call.in_specs) == 1 and len(call.operands) == 1
+    assert tuple(call.operands[0].shape) == mod._X
+    assert tuple(call.out_shape[0].shape) == mod._X
+
+
+# ---------------------------------------------------------------------------
+# fixture corpus: each bad_* flags exactly its code
+# ---------------------------------------------------------------------------
+
+def test_good_control_is_clean():
+    assert _codes(_fixtures().good_control) == []
+
+
+@pytest.mark.parametrize("name,code", [
+    ("bad_index_map_arity", "RPL101"),
+    ("bad_index_map_rank", "RPL101"),
+    ("bad_block_rank", "RPL102"),
+    ("bad_divisibility", "RPL103"),
+    ("bad_alignment", "RPL104"),
+    ("bad_kernel_arity", "RPL105"),
+])
+def test_broken_fixture_flags_exactly_its_code(name, code):
+    mod = _fixtures()
+    assert _codes(getattr(mod, name)) == [code]
+
+
+def test_findings_name_the_offending_spec():
+    mod = _fixtures()
+    got = pc.check_traced(mod.bad_divisibility, "fixture.py")
+    (f,) = got
+    assert f.path == "fixture.py"
+    assert "in_specs[0]" in f.message and "100" in f.message
+
+
+# ---------------------------------------------------------------------------
+# per-check unit coverage via hand-built captured calls
+# ---------------------------------------------------------------------------
+
+def _aval(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jax.numpy.float32)
+
+
+def _call(kernel, grid, in_specs, out_specs, out_shape, operands,
+          scratch=()):
+    return pc.CapturedCall(kernel=kernel, grid=tuple(grid),
+                           in_specs=list(in_specs), out_specs=list(out_specs),
+                           out_shape=list(out_shape),
+                           scratch_shapes=list(scratch),
+                           operands=list(operands))
+
+
+def _k2(x_ref, o_ref):
+    pass
+
+
+def test_whole_operand_spec_skipped():
+    # a spec without block_shape (whole-operand) has nothing to check
+    spec = pl.BlockSpec()
+    call = _call(_k2, (2,), [spec], [spec], [_aval((256, 256))],
+                 [_aval((256, 256))])
+    assert pc.check_call(call, "p") == []
+
+
+def test_none_block_dim_is_whole_axis():
+    spec = pl.BlockSpec((None, 256), lambda i: (i, 0))
+    call = _call(_k2, (2,), [spec], [pl.BlockSpec((128, 256),
+                                                  lambda i: (i, 0))],
+                 [_aval((256, 256))], [_aval((256, 256))])
+    codes = [f.code for f in pc.check_call(call, "p")]
+    assert "RPL103" not in codes and "RPL104" not in codes
+
+
+def test_trailing_whole_dim_is_aligned():
+    # trailing block dim == operand dim (e.g. ssd's P=64 axis) is exempt
+    spec = pl.BlockSpec((32, 64), lambda i: (i, 0))
+    call = _call(_k2, (2,), [spec], [spec], [_aval((64, 64))],
+                 [_aval((64, 64))])
+    assert [f.code for f in pc.check_call(call, "p")] == []
+
+
+def test_in_spec_operand_count_mismatch():
+    spec = pl.BlockSpec((128, 256), lambda i: (i, 0))
+    call = _call(_k2, (2,), [spec, spec], [spec], [_aval((256, 256))],
+                 [_aval((256, 256))])
+    codes = [f.code for f in pc.check_call(call, "p")]
+    assert "RPL105" in codes
+
+
+def test_partial_bound_kernel_arity():
+    import functools
+
+    def body(step, x_ref, o_ref, acc_ref):
+        pass
+
+    spec = pl.BlockSpec((128, 256), lambda i: (i, 0))
+    bound = functools.partial(body, 3)      # one positional bound -> 3 refs
+    call = _call(bound, (2,), [spec], [spec], [_aval((256, 256))],
+                 [_aval((256, 256))],
+                 scratch=[_aval((128, 128))])
+    assert pc.check_call(call, "p") == []
+    # without the scratch ref wired, the same body is a RPL105
+    call2 = _call(bound, (2,), [spec], [spec], [_aval((256, 256))],
+                  [_aval((256, 256))])
+    assert [f.code for f in pc.check_call(call2, "p")] == ["RPL105"]
+
+
+def test_varargs_kernel_not_checked():
+    def body(*refs):
+        pass
+
+    spec = pl.BlockSpec((128, 256), lambda i: (i, 0))
+    call = _call(body, (2,), [spec], [spec], [_aval((256, 256))],
+                 [_aval((256, 256))])
+    assert pc.check_call(call, "p") == []
+
+
+def test_scratch_nonpositive_dim():
+    spec = pl.BlockSpec((128, 256), lambda i: (i, 0))
+    call = _call(_k2, (2,), [spec], [spec], [_aval((256, 256))],
+                 [_aval((256, 256))], scratch=[_aval((128, 0))])
+    codes = [f.code for f in pc.check_call(call, "p")]
+    # RPL103 for the degenerate scratch dim, RPL105 for the unwired ref
+    assert "RPL103" in codes
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the three shipped kernels pass
+# ---------------------------------------------------------------------------
+
+def test_shipped_kernels_are_clean():
+    findings = pc.check_shipped()
+    assert findings == [], [f"{f.path}: {f.code} {f.message}"
+                            for f in findings]
+
+
+def test_shipped_covers_all_three_kernels():
+    assert set(pc.SHIPPED_KERNELS) == {
+        "src/repro/kernels/flash_attention/kernel.py",
+        "src/repro/kernels/rmsnorm/kernel.py",
+        "src/repro/kernels/ssd/kernel.py",
+    }
+    # every kernel entry actually makes at least one pallas_call
+    for path, trace in pc.SHIPPED_KERNELS.items():
+        with pc.capture_pallas_calls() as stub:
+            trace()
+        assert stub.calls, f"{path}: trace captured no pallas_call"

@@ -81,20 +81,20 @@ def test_injected_replay_conserves_capacity(n, gpus, seed, rate):
     rng = np.random.default_rng(seed)
     jobs = _random_jobs(rng, n, gpus)
     inj = FailureInjector(seed=seed, rate_scale=rate * 5e3)
-    res = replay_trace(jobs, gpus, reserved_frac=0.6,
-                       config=ReplayConfig(injector=inj, node_gpus=4,
-                                           record_segments=True, seed=seed))
+    cfg = ReplayConfig(injector=inj, node_gpus=4,
+                       record_segments=True, seed=seed)
+    res = replay_trace(jobs, gpus, reserved_frac=0.6, config=cfg)
     _assert_capacity_conserved(res.segments, gpus)
     killed = set(res.killed_job_ids)
     finished = {s[0] for s in res.segments if s[4] == "finish"}
     for j in jobs:
         assert j.queue_min >= 0 and j.requeue_wait_min >= 0
         assert j.lost_gpu_min >= 0
-        assert j.restarts <= 1 + ReplayConfig.max_restarts
+        assert j.restarts <= 1 + cfg.max_restarts
         # every job either finishes or exhausts its restart budget
         assert (j.job_id in finished) != (j.job_id in killed)
         if j.job_id in killed:
-            assert j.restarts == 1 + ReplayConfig.max_restarts
+            assert j.restarts == 1 + cfg.max_restarts
     # every injected failure is accounted as exactly one restart attempt
     assert sum(s.failures for s in res.by_class.values()) \
         == res.total_restarts
