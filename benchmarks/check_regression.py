@@ -70,7 +70,23 @@ GATES: dict[str, list[tuple[str, str, Optional[float]]]] = {
                   ("n512_probe_savings", "higher", None)],
     "checkpoint": [("7B-analog_stall_reduction", "higher", 0.5),
                    ("123B-analog_stall_reduction", "higher", 0.5)],
+    # cost-model benches (dryrun artifacts + analytic fallback). n_cells
+    # gets a tight band (losing a cell from CI's 4-cell set is a real
+    # artifact-pipeline regression); the physics ratios get wide bands —
+    # they only move when the model or the calibration changes, and the
+    # dryrun-provenance guard below already skips cross-cell-set compares.
+    "roofline": [("n_cells", "higher", 0.2),
+                 ("worst_roofline_frac", "higher", 0.5)],
+    "moe_comm": [("deepseek_over_dense", "higher", 0.5),
+                 ("mixtral_over_dense", "higher", 0.5),
+                 ("deepseek_a2a_gib_per_step", "higher", 0.5)],
 }
+
+# benches whose rows derive from artifacts/dryrun/** cells: their metrics
+# are only comparable when fresh and baseline were built from the *same*
+# cell set, so the per-artifact ``dryrun_fingerprint`` stamp (see
+# benchmarks.common.emit) must match before any metric is judged
+DRYRUN_GUARDED = ("roofline", "moe_comm")
 
 DEFAULT_TOLERANCE = 0.25
 
@@ -130,6 +146,19 @@ def check(fresh_dir: str, baseline_dir: str,
             continue
         fresh = _load_rows(fresh_path)
         base = _load_rows(base_path)
+        if bench in DRYRUN_GUARDED:
+            f_fp = fresh.get("dryrun_fingerprint")
+            b_fp = base.get("dryrun_fingerprint")
+            if f_fp is None or b_fp is None:
+                print(f"  {bench}: unstamped dryrun provenance "
+                      f"(fresh={f_fp} base={b_fp}), metrics skipped")
+                continue
+            if f_fp != b_fp:
+                print(f"  {bench}: dryrun cell set differs from baseline "
+                      f"(fingerprint {f_fp:.0f} vs {b_fp:.0f}) — rows are "
+                      "not comparable, metrics skipped (recommit the "
+                      "baseline to re-arm the gate)")
+                continue
         for metric, direction, tol_override in metrics:
             tol = tolerance if tol_override is None else tol_override
             if metric not in fresh:

@@ -136,6 +136,20 @@ def set_replint_stamp(verdict: dict) -> None:
     _REPLINT_STAMP = dict(verdict)
 
 
+# dryrun-artifact provenance (launch.cost_model.dryrun_provenance) stamped
+# into the benches that consume artifacts/dryrun/** — check_regression
+# compares the fingerprint before comparing any of their metrics, so a
+# roofline row is never judged against a baseline built from a different
+# cell set (different archs, or calibrated vs raw-HLO records).
+_DRYRUN_STAMP: "Optional[dict]" = None
+DRYRUN_STAMPED_BENCHES = ("roofline", "moe_comm")
+
+
+def set_dryrun_stamp(provenance: dict) -> None:
+    global _DRYRUN_STAMP
+    _DRYRUN_STAMP = dict(provenance)
+
+
 @dataclasses.dataclass
 class Row:
     bench: str
@@ -161,6 +175,18 @@ def emit(rows: list[Row], name: str) -> None:
                 target="no non-baseline lint findings", unit="bool"),
             Row(name, "replint_findings",
                 float(_REPLINT_STAMP.get("findings", 0)), unit="count"),
+        ]
+    if _DRYRUN_STAMP is not None and name in DRYRUN_STAMPED_BENCHES:
+        # the 32-bit crc fingerprint is exactly representable as a float,
+        # so it survives the Row value field and the JSON round-trip
+        rows = rows + [
+            Row(name, "dryrun_cells",
+                float(_DRYRUN_STAMP.get("n_cells", 0)), unit="count"),
+            Row(name, "dryrun_calibrated",
+                float(_DRYRUN_STAMP.get("n_calibrated", 0)), unit="count"),
+            Row(name, "dryrun_fingerprint",
+                float(int(_DRYRUN_STAMP.get("fingerprint", "0"), 16)),
+                target="cell-set identity for check_regression"),
         ]
     print(f"# --- {name} " + "-" * max(0, 60 - len(name)))
     print("bench,metric,value,unit,paper_target,verdict")

@@ -29,17 +29,24 @@ from benchmarks import (bench_checkpoint, bench_detection, bench_diagnosis,
                         bench_evalsched, bench_moe_comm, bench_pool,
                         bench_recovery, bench_replay, bench_roofline,
                         bench_trace)
-from benchmarks.common import ARTIFACTS, emit, set_replint_stamp
+from benchmarks.common import (ARTIFACTS, emit, set_dryrun_stamp,
+                               set_replint_stamp)
 
 # benches whose calibrated throughput forms the consolidated trajectory
 TRAJECTORY_BENCHES = ("replay", "pool", "evalsched")
 # per-knob replay rows recorded alongside (trajectory key -> source metric);
-# optional: absent from an artifact (e.g. a pre-PR-5 baseline) -> skipped
+# optional: absent from an artifact (e.g. a pre-PR-5 baseline) -> skipped.
+# The roofline/moe_comm keys track the calibrated cost-model rows in the
+# same per-commit history once the dryrun artifacts exist in CI.
 TRAJECTORY_EXTRAS = {
     "replay_legacy": ("replay", "events_per_calib_legacy"),
     "replay_placement": ("replay", "events_per_calib_placement"),
     "replay_best_effort": ("replay", "events_per_calib_best_effort"),
     "replay_full": ("replay", "events_per_calib_full"),
+    "roofline_n_cells": ("roofline", "n_cells"),
+    "roofline_worst_frac": ("roofline", "worst_roofline_frac"),
+    "moe_deepseek_over_dense": ("moe_comm", "deepseek_over_dense"),
+    "moe_mixtral_over_dense": ("moe_comm", "mixtral_over_dense"),
 }
 TRAJECTORY_BASELINE = os.path.join("artifacts", "bench", "BENCH_replay.json")
 
@@ -69,6 +76,25 @@ def _stamp_replint() -> dict:
     return _replint_verdict
 
 
+def _stamp_dryrun() -> dict:
+    """Record which dryrun artifact cells this run's cost-model benches
+    consumed (arch list + calibration state, hashed to a fingerprint);
+    ``check_regression`` refuses to compare roofline/moe_comm rows across
+    differing fingerprints."""
+    try:
+        from repro.launch.cost_model import dryrun_provenance
+        prov = dryrun_provenance()
+    except Exception as exc:  # noqa: BLE001 - a broken loader must not
+        #                       kill the bench run; the stamp records it
+        prov = {"archs": [], "n_cells": 0, "n_calibrated": 0,
+                "fingerprint": "00000000", "error": str(exc)}
+    set_dryrun_stamp(prov)
+    print(f"# dryrun artifacts: {prov['n_cells']} cells "
+          f"({prov['n_calibrated']} calibrated, archs={prov['archs']}, "
+          f"fingerprint {prov['fingerprint']})")
+    return prov
+
+
 def _run_label() -> str:
     """Commit-ish label for a trajectory entry: CI sha, else git, else
     'local'."""
@@ -85,7 +111,8 @@ def _run_label() -> str:
 
 def write_trajectory(artifacts_dir: str = ARTIFACTS,
                      baseline_path: str = TRAJECTORY_BASELINE,
-                     label: str | None = None) -> dict | None:
+                     label: str | None = None,
+                     extra_ok: "set[str] | None" = None) -> dict | None:
     """Consolidate this run's gated ``events_per_calib`` values into
     ``<artifacts_dir>/BENCH_replay.json``, extending the committed
     baseline's history (same-label entries are replaced, so re-runs do not
@@ -112,8 +139,23 @@ def write_trajectory(artifacts_dir: str = ARTIFACTS,
             return None
         entry[bench] = float(value)
     for key, (bench, metric) in TRAJECTORY_EXTRAS.items():
-        value = next((r["value"] for r in rows_by_bench.get(bench, ())
-                      if r["metric"] == metric), None)
+        rows = rows_by_bench.get(bench)
+        if rows is None:
+            # extras may live outside the gated trajectory benches (the
+            # cost-model rows); read their artifacts on demand, but only
+            # when the caller vouches the bench ran in this invocation
+            # (``extra_ok``) — a stale on-disk file must not enter the
+            # history. None (direct calls) keeps the permissive behavior.
+            if extra_ok is not None and bench not in extra_ok:
+                continue
+            path = os.path.join(artifacts_dir, f"{bench}.json")
+            if not os.path.exists(path):
+                continue
+            with open(path) as f:
+                rows = json.load(f)
+            rows_by_bench[bench] = rows
+        value = next((r["value"] for r in rows if r["metric"] == metric),
+                     None)
         if value is not None:
             entry[key] = float(value)
     history: list = []
@@ -155,6 +197,7 @@ def main() -> None:
                          "hot-path table -> profile_replay.json)")
     args = ap.parse_args()
     _stamp_replint()
+    _stamp_dryrun()
     failures = []
     succeeded = []
     for name, mod in BENCHES.items():
@@ -179,7 +222,7 @@ def main() -> None:
         # only artifacts produced by THIS invocation may enter the
         # trajectory — a --only or partially-failed run must not relabel
         # stale on-disk numbers as a fresh history point
-        write_trajectory()
+        write_trajectory(extra_ok=set(succeeded))
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")
 

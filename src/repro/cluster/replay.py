@@ -168,7 +168,7 @@ from repro.cluster.failures import (CHECKPOINTED_TYPES, PREEMPTION,
                                     synthesize_failure_log)
 from repro.cluster.scheduler import (HIGH_PRIORITY, NEVER_STARTED,
                                      ReservationScheduler)
-from repro.cluster.workload import JobRecord
+from repro.cluster.workload import PRETRAIN_ARCHS, JobRecord
 from repro.core.ft.detection import SimulatedFleet, two_round_detection
 from repro.core.ft.diagnosis import (VERDICT_HARDWARE, VERDICT_TRANSIENT,
                                      FailureDiagnosisSystem, verdict_class)
@@ -543,6 +543,21 @@ class ReplayConfig:
     revoke_overhead_min: float = 2.0              # preempted best-effort
     #                                               lease restart overhead
     #                                               (PREEMPTION-class parity)
+    # -- pluggable runtime model --------------------------------------------
+    runtime_model: str = "nominal"                # "nominal" | "roofline":
+    #                                               how elastic width changes
+    #                                               reprice remaining runtime.
+    #                                               "nominal" stretches
+    #                                               linearly (w/gpus);
+    #                                               "roofline" consults the
+    #                                               arch's calibrated width
+    #                                               curve for jobs tagged
+    #                                               with JobRecord.arch
+    cost_model: Optional[object] = None           # launch.cost_model
+    #                                               .CostModel; None under
+    #                                               "roofline" loads the
+    #                                               default (artifacts +
+    #                                               analytic fallback)
 
 
 @dataclasses.dataclass(slots=True)
@@ -586,6 +601,10 @@ class ReplayResult:
     borrow: Optional[dict] = None    # TrialBorrower.stats() when borrowing
     be_lease_starts: int = 0         # best-effort jobs started on leases
     placement: Optional[dict] = None  # NodeLedger drain state (placement on)
+    # runtime-model accounting (None under the default "nominal" model, so
+    # summaries — and the committed golden fixtures — are unchanged unless
+    # a roofline replay was requested)
+    runtime_model_stats: Optional[dict] = None
     head_delays: list = dataclasses.field(default_factory=list)
     #   realized minutes each blocked FIFO head waited before starting
     shadow_errors: list = dataclasses.field(default_factory=list)
@@ -671,7 +690,7 @@ class ReplayResult:
             restarts[t] = {"total": int(a[2]), "max": int(a[3]),
                            "jobs_restarted": int(a[4])}
             lost[t] = {"gpu_hours": float(a[5] / 60.0)}
-        return {
+        summary = {
             "n_jobs": len(self.jobs),
             "events_processed": self.events_processed,
             "queue_delay_quantiles": queue,
@@ -707,6 +726,12 @@ class ReplayResult:
             "head_delay": head_delay_stats(self),
             "placement": placement_stats(self),
         }
+        if self.runtime_model_stats is not None:
+            # key present only for roofline replays: the nominal-mode
+            # summary tree — and every committed golden fixture built from
+            # it — must stay byte-identical
+            summary["runtime_model"] = self.runtime_model_stats
+        return summary
 
 
 def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
@@ -731,6 +756,17 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
     if cfg.recovery_policy not in ("auto", POLICY_REQUEUE, POLICY_INPLACE,
                                    POLICY_ELASTIC):
         raise ValueError(f"unknown recovery_policy {cfg.recovery_policy!r}")
+    if cfg.runtime_model not in ("nominal", "roofline"):
+        raise ValueError(f"unknown runtime_model {cfg.runtime_model!r}")
+    cost_model = None
+    if cfg.runtime_model == "roofline":
+        cost_model = cfg.cost_model
+        if cost_model is None:
+            # default model: calibrated cells from artifacts/dryrun/** when
+            # present, deterministic analytic fallback otherwise (lazy
+            # import — nominal replays never touch the launch stack)
+            from repro.launch.cost_model import CostModel
+            cost_model = CostModel.load(archs=PRETRAIN_ARCHS)
     diagnosis: Optional[DiagnosisLoop] = None
     diag_incidents0 = diag_runs0 = 0
     if injector is not None and (cfg.diagnose or cfg.diagnosis is not None):
@@ -972,11 +1008,17 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
     def schedule_end(job: JobRecord) -> None:
         """(Re)schedule the job's end event from ``_seg_start`` at the
         current width, with the remaining runtime stretched proportionally
-        and a fresh (memoryless) failure draw."""
+        — or, for a curve-carrying job under ``runtime_model="roofline"``,
+        by the arch's modeled progress rate at this width — and a fresh
+        (memoryless) failure draw."""
         nonlocal seq
         job._epoch = ep = job._epoch + 1
         w = job._width
-        remaining = (job.duration_min - job._prog) * job.gpus / w
+        curve = job._curve
+        if curve is None:
+            remaining = (job.duration_min - job._prog) * job.gpus / w
+        else:
+            remaining = (job.duration_min - job._prog) / curve.rate(w)
         best_cls = None
         if inj_rates is not None:           # inlined draw (see start)
             best_t = remaining
@@ -1063,7 +1105,12 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
         separable from the injected class."""
         nonlocal seq
         w = job._width
-        progress = job._prog + max(0.0, now - job._seg_start) * w / job.gpus
+        if job._curve is None:
+            progress = job._prog \
+                + max(0.0, now - job._seg_start) * w / job.gpus
+        else:
+            progress = job._prog \
+                + max(0.0, now - job._seg_start) * job._curve.rate(w)
         if cfg.record_segments and now > job._seg_start:
             result.segments.append(
                 (job.job_id, w, job._seg_start, now, "revoke"))
@@ -1279,15 +1326,22 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
             if k <= 0:
                 continue
             w = job._width
+            curve = job._curve
             if now > job._seg_start:
                 t_base = now
-                prog = job._prog + (now - job._seg_start) * w / job.gpus
+                if curve is None:
+                    prog = job._prog + (now - job._seg_start) * w / job.gpus
+                else:
+                    prog = job._prog + (now - job._seg_start) * curve.rate(w)
             else:                       # still paying restart re-init
                 t_base = job._seg_start
                 prog = job._prog
             if easy and (wait_hi or wait_lo):
-                new_end = t_base + reshard \
-                    + (job.duration_min - prog) * job.gpus / (w + k)
+                if curve is None:
+                    rem = (job.duration_min - prog) * job.gpus / (w + k)
+                else:
+                    rem = (job.duration_min - prog) / curve.rate(w + k)
+                new_end = t_base + reshard + rem
                 ok = True
                 for q in (wait_hi, wait_lo):
                     if q and new_end > shadow_start(q[0]) + 1e-9:
@@ -1460,7 +1514,12 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
         job_nodes = list(job._nodes) if job._nodes else None
         # -- fold the failed segment & roll back to the last checkpoint ----
         w = job._width
-        progress = job._prog + max(0.0, now - job._seg_start) * w / job.gpus
+        if job._curve is None:
+            progress = job._prog \
+                + max(0.0, now - job._seg_start) * w / job.gpus
+        else:
+            progress = job._prog \
+                + max(0.0, now - job._seg_start) * job._curve.rate(w)
         if cfg.record_segments and now > job._seg_start:
             result.segments.append(
                 (job.job_id, w, job._seg_start, now, "fail"))
@@ -1645,8 +1704,12 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
                     result.segments.append(
                         (lender.job_id, lender._width, lender._seg_start,
                          now, "resize"))
-                lender._prog += (now - lender._seg_start) \
-                    * lender._width / lender.gpus
+                if lender._curve is None:
+                    lender._prog += (now - lender._seg_start) \
+                        * lender._width / lender.gpus
+                else:
+                    lender._prog += (now - lender._seg_start) \
+                        * lender._curve.rate(lender._width)
                 lender._seg_start = now
             if cfg.reshard_cost_min > 0.0:
                 # the width change at the repair pays the same explicit
@@ -1715,6 +1778,13 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
                 job._shadow_est = None
                 job._nodes = None
                 job._hi = job.jtype in hi_types
+                # resolve the arch's width curve once per job (cached per
+                # (arch, gpus) inside the model); always (re)assigned so a
+                # record replayed under a different runtime model can't
+                # carry a stale curve
+                job._curve = None if cost_model is None \
+                    or job.arch is None \
+                    else cost_model.job_curve(job.arch, job.gpus)
                 on_arrive(job, now)
                 if _reconcile is not None:
                     # the arrival may have started and consumed leased
@@ -1788,6 +1858,21 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
                 j.queue_min = NEVER_STARTED
     result.events_processed = processed
     result.horizon_min = pool_t
+    if cost_model is not None:
+        n_tagged = n_modeled = 0
+        archs: collections.Counter = collections.Counter()
+        for j in jobs:
+            if j.arch is not None:
+                n_tagged += 1
+                if j._curve is not None:
+                    n_modeled += 1
+                    archs[j.arch] += 1
+        result.runtime_model_stats = {
+            "model": cfg.runtime_model,
+            "jobs_tagged": n_tagged,
+            "jobs_modeled": n_modeled,
+            "archs": dict(sorted(archs.items())),
+        }
     if ledger is not None:
         result.placement = {
             "n_nodes": ledger.n_nodes,

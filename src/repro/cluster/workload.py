@@ -102,6 +102,13 @@ class JobRecord:
     # lease — the paper's §3.2 quota-reclamation preemption as a
     # scheduling policy (see repro.cluster.replay)
     best_effort: bool = False
+    # real architecture behind the job (a repro.configs registry name).
+    # Tagged on a configurable fraction of pretraining jobs; under
+    # ReplayConfig(runtime_model="roofline") the replay derives the job's
+    # width-scaling curve from the arch's calibrated roofline cell, so
+    # elastic shrink/regrow reprices via modeled parallel efficiency
+    # instead of linear stretching. None = nominal trace-minute pricing.
+    arch: Optional[str] = None
     # -- engine-transient state (repro.cluster.replay / scheduler) ----------
     # Declared so the class can carry __slots__: the replay engine reads
     # and writes these per event, and slot access keeps the hottest loop of
@@ -133,6 +140,10 @@ class JobRecord:
         init=False, repr=False, compare=False, default=None)
     _hi: bool = dataclasses.field(
         init=False, repr=False, compare=False, default=False)
+    # width-scaling curve (launch.cost_model.WidthCurve) resolved from
+    # ``arch`` by the replay's reset loop; None = nominal repricing
+    _curve: Optional[object] = dataclasses.field(
+        init=False, repr=False, compare=False, default=None)
 
     @property
     def gpu_time(self) -> float:
@@ -185,19 +196,34 @@ def _sample_demand(t: TypeSpec, n: int, rng: np.random.Generator) -> np.ndarray:
 # pretraining (it holds the reservation the tier scavenges).
 BEST_EFFORT_TYPES = ("debug", "other", "sft", "mllm")
 
+# default architecture pool for ``generate_jobs(arch_frac=...)``: the
+# registry names (repro.configs) a tagged pretraining job is drawn from —
+# the paper's own InternLM family plus a spread of dense and MoE archs so
+# a roofline-model replay exercises both collective profiles.
+PRETRAIN_ARCHS = ("internlm-7b", "internlm-123b", "gemma3-27b",
+                  "nemotron-4-15b", "mixtral-8x22b", "deepseek-v2-lite-16b")
+
 
 def generate_jobs(spec: WorkloadSpec, *, seed: int = 0,
                   n_jobs: Optional[int] = None,
                   horizon_min: float = SIX_MONTHS_MIN,
                   best_effort_frac: float = 0.0,
-                  best_effort_types: Optional[tuple] = None) -> list[JobRecord]:
+                  best_effort_types: Optional[tuple] = None,
+                  arch_frac: float = 0.0,
+                  arch_pool: Optional[tuple] = None) -> list[JobRecord]:
     """Draw the 6-month job population (submission via a diurnal Poisson).
 
     ``best_effort_frac`` submits that fraction of eligible-type jobs
     (``best_effort_types``, default :data:`BEST_EFFORT_TYPES`) to the
     revocable-lease tier (``JobRecord.best_effort``). Flagging uses its own
     RNG stream, so the generated population is bit-identical to
-    ``best_effort_frac=0`` in every other field."""
+    ``best_effort_frac=0`` in every other field.
+
+    ``arch_frac`` tags that fraction of *pretraining* jobs with a real
+    config name from ``arch_pool`` (default :data:`PRETRAIN_ARCHS`) in
+    ``JobRecord.arch``. Tagging likewise uses its own RNG stream: every
+    other field is bit-identical to ``arch_frac=0``, and under the default
+    ``runtime_model="nominal"`` the tag is inert."""
     rng = np.random.default_rng(seed)
     scales = _calibrate_scales(spec, np.random.default_rng(seed + 1))
     n_total = n_jobs or spec.n_gpu_jobs
@@ -245,4 +271,10 @@ def generate_jobs(spec: WorkloadSpec, *, seed: int = 0,
         for j in jobs:
             if j.jtype in be_types and be_rng.random() < best_effort_frac:
                 j.best_effort = True
+    if arch_frac > 0.0:
+        pool = tuple(arch_pool if arch_pool is not None else PRETRAIN_ARCHS)
+        arch_rng = np.random.default_rng((seed << 2) ^ 0xA6C4)
+        for j in jobs:
+            if j.jtype == "pretrain" and arch_rng.random() < arch_frac:
+                j.arch = pool[int(arch_rng.integers(0, len(pool)))]
     return jobs

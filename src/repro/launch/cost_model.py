@@ -1,0 +1,294 @@
+"""Per-arch step-time cost model: dry-run artifacts -> width-scaling curves.
+
+This is the layer that makes the jax_pallas half load-bearing for the
+cluster simulation (ROADMAP "cost-model-grounded replay", MoFa-style):
+
+  dryrun --calibrate  ->  artifacts/dryrun/<mesh>/<arch>/<shape>.json
+  roofline.cell_roofline  ->  three-term seconds-per-step (compute / memory
+                              / collective) at the recorded mesh width
+  CostModel               ->  per-(arch, shape) ``CostCell`` table with a
+                              deterministic *analytic* fallback for archs
+                              without artifacts (tier-1 stays hermetic)
+  WidthCurve              ->  T(w) = work_s / w + coll_s, the repricing
+                              curve the replay engine consults on elastic
+                              shrink/regrow instead of linear stretching
+
+The width model splits a cell's step time into *divisible work* (the
+larger of the compute and memory terms, which shards with width) and the
+*collective* term (per-device ring/all-to-all traffic, to first order
+width-invariant under ZeRO-style sharding — halving the width halves the
+gathered bytes but also halves the links moving them). That yields the
+MegaScale-flavored behavior the paper motivates: shrinking a job hurts
+*less* than linearly (rate(w) > w/W0 for w < W0, the collective share
+doesn't grow), and regrowing gains less than linearly.
+
+The analytic fallback is NOT magnitude-faithful to the calibrated cells
+(XLA's HLO byte accounting inflates collective totals vs the naive
+estimate); it exists to give *deterministic, correctly ordered* cells —
+MoE archs several times more collective-heavy per useful FLOP than dense
+— when ``artifacts/dryrun/**`` is absent, so golden tests and benches are
+reproducible on a bare checkout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import zlib
+from typing import Optional
+
+from repro.launch.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, active_params,
+                                   cell_roofline, load_cells,
+                                   model_flops_per_device)
+from repro.launch.shapes import SHAPES
+
+DEFAULT_ART_DIR = "artifacts/dryrun/single"
+#: single-pod mesh width every dry-run cell is recorded at
+NOMINAL_DEVICES = 256
+
+# analytic-fallback constants (documented, deterministic; see module doc)
+_ANALYTIC_HLO_EFFICIENCY = 0.85   # model FLOPs / HLO FLOPs (remat waste)
+_ANALYTIC_FLOPS_PER_BYTE = 12.0   # fusion-level arithmetic intensity
+_ANALYTIC_ZERO_BYTES_PER_PARAM = 12.0   # fwd/bwd gathers + grad reduce
+_ANALYTIC_TP_BYTES_PER_ACT = 8.0        # per token*d_model*layer element
+
+
+@dataclasses.dataclass(frozen=True)
+class CostCell:
+    """One (arch, shape) step-time observation at the nominal mesh width."""
+    arch: str
+    shape: str
+    kind: str
+    n_devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    model_flops: float
+    collective_bytes: float
+    a2a_bytes: float
+    source: str                  # "calibrated" | "dryrun" | "analytic"
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s) + self.collective_s
+
+
+class WidthCurve:
+    """Step-time vs width for one arch: ``T(w) = work_s / w + coll_s``.
+
+    ``work_s`` is the cell's divisible work in device-seconds
+    (max(compute, memory) * n_devices); ``coll_s`` is the width-invariant
+    per-device collective term. ``rate(w)`` is the progress rate relative
+    to the nominal width — the quantity the replay engine multiplies wall
+    minutes by. ``rate(n_devices)`` is *exactly* 1.0 (same float expression
+    divided by itself), which is what keeps full-width replays bit-exact.
+    """
+    __slots__ = ("arch", "n_devices", "work_s", "coll_s", "t_nom")
+
+    def __init__(self, arch: str, n_devices: int, work_s: float,
+                 coll_s: float) -> None:
+        self.arch = arch
+        self.n_devices = n_devices
+        self.work_s = work_s
+        self.coll_s = coll_s
+        self.t_nom = work_s / n_devices + coll_s
+
+    @classmethod
+    def from_cell(cls, cell: CostCell) -> "WidthCurve":
+        return cls(cell.arch, cell.n_devices,
+                   max(cell.compute_s, cell.memory_s) * cell.n_devices,
+                   cell.collective_s)
+
+    def step_time(self, width: float) -> float:
+        return self.work_s / width + self.coll_s
+
+    def rate(self, width: float) -> float:
+        """Nominal-minutes of progress per wall minute at ``width`` GPUs."""
+        return self.t_nom / (self.work_s / width + self.coll_s)
+
+    def efficiency(self, width: float) -> float:
+        """Parallel efficiency T(1) / (w * T(w)); 1.0 at w=1, <= 1,
+        monotone non-increasing in width."""
+        return (self.work_s + self.coll_s) / (self.work_s
+                                              + width * self.coll_s)
+
+    def __repr__(self) -> str:
+        return (f"WidthCurve({self.arch!r}, n={self.n_devices}, "
+                f"work={self.work_s:.3e}s, coll={self.coll_s:.3e}s)")
+
+
+def _analytic_cell(arch: str, shape_name: str = "train_4k",
+                   n_devices: int = NOMINAL_DEVICES) -> CostCell:
+    """Deterministic closed-form cell from the arch config alone."""
+    from repro.config import get_arch
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    total, _active = active_params(cfg)
+    mf = model_flops_per_device(cfg, shape.kind, shape.seq_len,
+                                shape.global_batch, n_devices)
+    hlo_flops = mf / _ANALYTIC_HLO_EFFICIENCY
+    byts = hlo_flops / _ANALYTIC_FLOPS_PER_BYTE
+    if shape.kind == "decode":
+        tokens_dev = shape.global_batch / n_devices
+    else:
+        tokens_dev = shape.seq_len * shape.global_batch / n_devices
+    n_layers = cfg.num_layers + cfg.encoder_layers
+    coll = (_ANALYTIC_ZERO_BYTES_PER_PARAM * total
+            + _ANALYTIC_TP_BYTES_PER_ACT * tokens_dev * cfg.d_model
+            * n_layers)
+    a2a = 0.0
+    if cfg.moe.num_experts:
+        n_moe = sum(cfg.moe.is_moe_layer(i) for i in range(cfg.num_layers))
+        a2a = (_ANALYTIC_TP_BYTES_PER_ACT * tokens_dev * cfg.d_model
+               * cfg.moe.top_k * n_moe)
+        coll += a2a
+    return CostCell(
+        arch=arch, shape=shape_name, kind=shape.kind, n_devices=n_devices,
+        compute_s=hlo_flops / PEAK_FLOPS, memory_s=byts / HBM_BW,
+        collective_s=coll / ICI_BW, hlo_flops=hlo_flops, model_flops=mf,
+        collective_bytes=coll, a2a_bytes=a2a, source="analytic")
+
+
+def _cell_from_record(rec: dict, skipped: Optional[dict] = None
+                      ) -> Optional[CostCell]:
+    r = cell_roofline(rec, skipped=skipped)
+    if r is None:
+        return None
+    cal = rec.get("calibrated")
+    if not isinstance(cal, dict):
+        cal = {}
+    try:
+        a2a = float(cal.get("coll_all-to-all", 0.0))
+    except (TypeError, ValueError):
+        a2a = 0.0
+    return CostCell(
+        arch=r.arch, shape=r.shape, kind=r.kind,
+        n_devices=int(rec["n_devices"]),
+        compute_s=r.compute_s, memory_s=r.memory_s,
+        collective_s=r.collective_s, hlo_flops=r.hlo_flops,
+        model_flops=r.model_flops, collective_bytes=r.collective_bytes,
+        a2a_bytes=a2a, source="calibrated" if r.calibrated else "dryrun")
+
+
+class CostModel:
+    """Per-(arch, shape) ``CostCell`` table + per-arch ``WidthCurve``s."""
+    __slots__ = ("cells", "skipped", "art_dir", "_curves", "_job_curves")
+
+    def __init__(self, cells: dict, skipped: dict,
+                 art_dir: Optional[str]) -> None:
+        self.cells = cells            # (arch, shape) -> CostCell
+        self.skipped = skipped        # reason -> count (malformed records)
+        self.art_dir = art_dir        # None for a purely analytic model
+        self._curves: dict = {}       # arch -> Optional[WidthCurve]
+        self._job_curves: dict = {}   # (arch, gpus) -> Optional[WidthCurve]
+
+    @classmethod
+    def load(cls, art_dir: str = DEFAULT_ART_DIR,
+             archs: tuple = (), analytic_fallback: bool = True
+             ) -> "CostModel":
+        """Cells from the artifact tree; ``archs`` lists architectures that
+        must be present — any without a train cell on disk get an analytic
+        fallback cell (counted in ``skipped['analytic_fallback']``)."""
+        skipped: dict = {}
+        cells: dict = {}
+        for rec in load_cells(art_dir, skipped=skipped):
+            cell = _cell_from_record(rec, skipped=skipped)
+            if cell is not None:
+                cells[(cell.arch, cell.shape)] = cell
+        if analytic_fallback:
+            for arch in archs:
+                if (arch, "train_4k") not in cells:
+                    try:
+                        cells[(arch, "train_4k")] = _analytic_cell(arch)
+                    except (KeyError, ValueError):
+                        skipped["unknown_arch"] = (
+                            skipped.get("unknown_arch", 0) + 1)
+                        continue
+                    skipped["analytic_fallback"] = (
+                        skipped.get("analytic_fallback", 0) + 1)
+        return cls(cells, skipped, art_dir)
+
+    @classmethod
+    def analytic(cls, archs: tuple) -> "CostModel":
+        """Hermetic model: every cell closed-form, no artifacts read."""
+        skipped: dict = {}
+        cells: dict = {}
+        for arch in archs:
+            try:
+                cells[(arch, "train_4k")] = _analytic_cell(arch)
+            except (KeyError, ValueError):
+                skipped["unknown_arch"] = skipped.get("unknown_arch", 0) + 1
+        return cls(cells, skipped, None)
+
+    def cell(self, arch: str, shape: str = "train_4k"
+             ) -> Optional[CostCell]:
+        return self.cells.get((arch, shape))
+
+    def curve(self, arch: str) -> Optional[WidthCurve]:
+        """Width-scaling curve from the arch's train cell (cached);
+        ``None`` when the arch has no cell (job falls back to nominal)."""
+        if arch in self._curves:
+            return self._curves[arch]
+        cell = self.cells.get((arch, "train_4k"))
+        curve = WidthCurve.from_cell(cell) if cell is not None else None
+        self._curves[arch] = curve
+        return curve
+
+    def job_curve(self, arch: str, gpus: int) -> Optional[WidthCurve]:
+        """Width curve *re-anchored at the job's nominal width*: the
+        replay's progress accounting needs ``rate(gpus) == 1.0`` exactly
+        (a full-width job advances one nominal minute per wall minute by
+        definition), so the curve's reference step time is evaluated at
+        the job's own GPU count. The curve *shape* is unchanged —
+        ``rate`` only ever uses step-time ratios. Cached per
+        (arch, gpus): the replay resolves one per job arrival."""
+        key = (arch, gpus)
+        if key in self._job_curves:
+            return self._job_curves[key]
+        cell = self.cells.get((arch, "train_4k"))
+        if cell is None:
+            curve = None
+        else:
+            curve = WidthCurve(arch, gpus,
+                               max(cell.compute_s, cell.memory_s)
+                               * cell.n_devices, cell.collective_s)
+        self._job_curves[key] = curve
+        return curve
+
+    def archs(self) -> list[str]:
+        return sorted({a for a, _ in self.cells})
+
+
+def dryrun_provenance(art_dir: str = DEFAULT_ART_DIR) -> dict:
+    """Identity of the artifact cells a bench run consumed.
+
+    ``benchmarks.run`` stamps this next to the bench rows so
+    ``check_regression`` can refuse to compare roofline/moe_comm numbers
+    against a baseline built from a different cell set (different archs,
+    or calibrated vs raw-HLO records)."""
+    skipped: dict = {}
+    ids = []
+    for rec in load_cells(art_dir, skipped=skipped):
+        if rec.get("status") != "ok":
+            continue
+        cal = rec.get("calibrated")
+        calibrated = isinstance(cal, dict) and bool(cal)
+        try:
+            n_dev = int(rec.get("n_devices") or 0)
+        except (TypeError, ValueError):
+            n_dev = 0
+        # identity is the *cell set* — which (arch, shape) cells exist, at
+        # what width, calibrated or raw — not the measured numbers: the
+        # gates' tolerance bands judge the numbers, the fingerprint only
+        # refuses structurally different tables (and must stay stable
+        # across XLA versions whose cost analysis drifts slightly)
+        ids.append((str(rec.get("arch")), str(rec.get("shape")),
+                    int(calibrated), n_dev))
+    ids.sort()
+    fp = zlib.crc32(json.dumps(ids).encode("utf-8")) & 0xFFFFFFFF
+    return {
+        "archs": sorted({i[0] for i in ids}),
+        "n_cells": len(ids),
+        "n_calibrated": sum(i[2] for i in ids),
+        "fingerprint": f"{fp:08x}",
+    }

@@ -70,6 +70,7 @@ class CellRoofline:
     mem_args_gib: float
     mem_temp_gib: float
     collective_bytes: float
+    calibrated: bool = False     # record carried depth-extrapolated totals
 
     def row(self) -> str:
         return (f"{self.arch},{self.shape},{self.kind},"
@@ -79,56 +80,110 @@ class CellRoofline:
                 f"{self.mem_args_gib:.2f},{self.mem_temp_gib:.2f}")
 
 
-def cell_roofline(rec: dict, cfg=None) -> Optional[CellRoofline]:
-    if rec.get("status") != "ok":
+def _count(skipped: Optional[dict], reason: str) -> None:
+    if skipped is not None:
+        skipped[reason] = skipped.get(reason, 0) + 1
+
+
+def cell_roofline(rec: dict, cfg=None,
+                  skipped: Optional[dict] = None) -> Optional[CellRoofline]:
+    """Three-term roofline for one dry-run record, or ``None``.
+
+    Partial or malformed records — a cell that failed to compile, a
+    ``calibrated`` blob that is not a dict, missing/garbled identity or
+    cost fields — are *skipped* (with a counted reason in ``skipped``)
+    rather than raised on: one corrupt artifact must not take down a
+    bench run or a replay that prices jobs off the table."""
+    if not isinstance(rec, dict):
+        _count(skipped, "not_a_record")
         return None
-    cal = rec.get("calibrated") or {}
-    flops = cal.get("flops") or rec.get("cost", {}).get("flops", 0.0)
-    byts = cal.get("bytes_accessed") or rec.get("cost", {}).get(
-        "bytes_accessed", 0.0)
-    coll = (cal.get("coll_total")
-            if cal.get("coll_total") is not None
-            else rec.get("collectives", {}).get("total_bytes_per_device",
-                                                0.0))
+    if rec.get("status") != "ok":
+        _count(skipped, f"status_{rec.get('status', 'missing')}")
+        return None
+    cal = rec.get("calibrated")
+    if not isinstance(cal, dict):
+        cal = {}
+    cost = rec.get("cost")
+    if not isinstance(cost, dict):
+        cost = {}
+    colls = rec.get("collectives")
+    if not isinstance(colls, dict):
+        colls = {}
+    try:
+        flops = float(cal.get("flops") or cost.get("flops", 0.0))
+        byts = float(cal.get("bytes_accessed")
+                     or cost.get("bytes_accessed", 0.0))
+        coll = float(cal["coll_total"] if cal.get("coll_total") is not None
+                     else colls.get("total_bytes_per_device", 0.0))
+        arch, shape, kind = rec["arch"], rec["shape"], rec["kind"]
+        seq_len = int(rec["seq_len"])
+        global_batch = int(rec["global_batch"])
+        n_devices = int(rec["n_devices"])
+    except (KeyError, TypeError, ValueError):
+        _count(skipped, "malformed_record")
+        return None
     compute_s = flops / PEAK_FLOPS
     memory_s = byts / HBM_BW
     coll_s = coll / ICI_BW
     terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
     dominant = max(terms, key=terms.get)
-    if cfg is None:
-        from repro.config import get_arch
-        cfg = get_arch(rec["arch"])
-    mf = model_flops_per_device(cfg, rec["kind"], rec["seq_len"],
-                                rec["global_batch"], rec["n_devices"])
-    mem = rec.get("memory", {})
+    try:
+        if cfg is None:
+            from repro.config import get_arch
+            cfg = get_arch(arch)
+        mf = model_flops_per_device(cfg, kind, seq_len, global_batch,
+                                    n_devices)
+    except (KeyError, ValueError, TypeError):
+        _count(skipped, "unknown_arch")
+        return None
+    mem = rec.get("memory")
+    if not isinstance(mem, dict):
+        mem = {}
     return CellRoofline(
-        arch=rec["arch"], shape=rec["shape"], kind=rec["kind"],
+        arch=arch, shape=shape, kind=kind,
         compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
         dominant=dominant, hlo_flops=flops, model_flops=mf,
         useful_ratio=mf / flops if flops else 0.0,
         roofline_frac=compute_s / max(max(terms.values()), 1e-30),
         mem_args_gib=mem.get("argument_size_in_bytes", 0.0) / 2 ** 30,
         mem_temp_gib=mem.get("temp_size_in_bytes", 0.0) / 2 ** 30,
-        collective_bytes=coll)
+        collective_bytes=coll,
+        calibrated=bool(cal))
 
 
-def load_cells(art_dir: str = "artifacts/dryrun/single") -> list[dict]:
+def load_cells(art_dir: str = "artifacts/dryrun/single",
+               skipped: Optional[dict] = None) -> list[dict]:
+    """Raw dry-run records under ``art_dir``. Truncated or unreadable
+    JSON files are skipped (reason counted into ``skipped``), never
+    raised — a partially written artifact tree must stay loadable."""
     out = []
     if not os.path.isdir(art_dir):
         return out
     for arch in sorted(os.listdir(art_dir)):
         d = os.path.join(art_dir, arch)
+        if not os.path.isdir(d):
+            continue
         for f in sorted(os.listdir(d)):
-            if f.endswith(".json"):
+            if not f.endswith(".json"):
+                continue
+            try:
                 with open(os.path.join(d, f)) as fh:
-                    out.append(json.load(fh))
+                    rec = json.load(fh)
+            except (OSError, ValueError):
+                _count(skipped, "unreadable_json")
+                continue
+            if not isinstance(rec, dict):
+                _count(skipped, "not_a_record")
+                continue
+            out.append(rec)
     return out
 
 
-def full_table(art_dir: str = "artifacts/dryrun/single") -> list[CellRoofline]:
+def full_table(art_dir: str = "artifacts/dryrun/single",
+               skipped: Optional[dict] = None) -> list[CellRoofline]:
     rows = []
-    for rec in load_cells(art_dir):
-        r = cell_roofline(rec)
+    for rec in load_cells(art_dir, skipped=skipped):
+        r = cell_roofline(rec, skipped=skipped)
         if r is not None:
             rows.append(r)
     return rows

@@ -19,7 +19,7 @@ def _write(dirp, bench, metrics):
         json.dump(rows, f)
 
 
-def _write_all(dirp, scale=1.0):
+def _write_all(dirp, scale=1.0, fingerprint=1234.0):
     _write(dirp, "replay", {"events_per_calib": 0.8 * scale,
                             "events_per_calib_full": 0.8 * scale,
                             "events_per_calib_legacy": 1.1 * scale,
@@ -32,6 +32,16 @@ def _write_all(dirp, scale=1.0):
                                "n512_probe_savings": 490.0 * scale})
     _write(dirp, "checkpoint", {"7B-analog_stall_reduction": 10.0 * scale,
                                 "123B-analog_stall_reduction": 19.0 * scale})
+    # cost-model benches: dryrun-derived rows + the provenance stamp the
+    # gate checks before judging them (the fingerprint never scales — a
+    # differing one means a different cell set, covered separately below)
+    _write(dirp, "roofline", {"n_cells": 4.0 * scale,
+                              "worst_roofline_frac": 0.004 * scale,
+                              "dryrun_fingerprint": fingerprint})
+    _write(dirp, "moe_comm", {"deepseek_over_dense": 6.0 * scale,
+                              "mixtral_over_dense": 3.5 * scale,
+                              "deepseek_a2a_gib_per_step": 9.75 * scale,
+                              "dryrun_fingerprint": fingerprint})
 
 
 def test_gate_passes_within_tolerance(tmp_path):
@@ -116,10 +126,41 @@ def test_missing_baseline_is_skipped_missing_fresh_fails(tmp_path):
     assert any("replay" in f and "missing" in f for f in failures)
 
 
+def test_dryrun_fingerprint_guards_cost_model_rows(tmp_path):
+    """roofline/moe_comm rows from different dryrun cell sets must never
+    be judged against each other: a differing (or missing) fingerprint
+    skips their metrics entirely instead of reporting regressions."""
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write_all(str(base))
+    _write_all(str(fresh), scale=0.40, fingerprint=5678.0)  # other cells
+    failures = check(str(fresh), str(base))
+    assert not any(f.startswith(("roofline", "moe_comm")) for f in failures)
+    assert any(f.startswith("replay") for f in failures)    # still gated
+    # unstamped artifacts (either side) are skipped too, not failed
+    _write(str(fresh), "roofline", {"n_cells": 1.0})
+    _write(str(fresh), "moe_comm", {"deepseek_over_dense": 0.1})
+    failures = check(str(fresh), str(base))
+    assert not any(f.startswith(("roofline", "moe_comm")) for f in failures)
+    # matching fingerprints arm the gate: now the same drop fails
+    _write_all(str(fresh), scale=0.40)
+    failures = check(str(fresh), str(base))
+    assert any(f.startswith("roofline.n_cells") for f in failures)
+    assert any(f.startswith("moe_comm.deepseek_over_dense")
+               for f in failures)
+
+
 def test_tolerance_is_configurable(tmp_path):
     base, fresh = tmp_path / "base", tmp_path / "fresh"
     _write_all(str(base))
     _write_all(str(fresh), scale=0.70)
+    failures = check(str(fresh), str(base), tolerance=0.5)
+    # per-metric overrides are immune to --tolerance: roofline.n_cells
+    # keeps its tight 20% band (losing a cell from the 4-cell CI set is
+    # a real artifact-pipeline regression, never noise)
+    assert [f.split(" ")[0] for f in failures] == ["roofline.n_cells"]
+    _write(str(fresh), "roofline", {"n_cells": 4.0,
+                                    "worst_roofline_frac": 0.004 * 0.70,
+                                    "dryrun_fingerprint": 1234.0})
     assert check(str(fresh), str(base), tolerance=0.5) == []
     assert DEFAULT_TOLERANCE == pytest.approx(0.25)
 

@@ -1,0 +1,317 @@
+"""Cost model (repro.launch.cost_model): width-curve physics, analytic
+fallback ordering, artifact-tree hardening, workload arch tagging, dryrun
+provenance fingerprints, and the replay engine's nominal-parity contract
+for ``runtime_model="roofline"``."""
+import json
+
+import pytest
+
+from repro.cluster import (KALOS, FailureInjector, ReplayConfig,
+                           generate_jobs, replay_trace)
+from repro.cluster.workload import PRETRAIN_ARCHS
+from repro.launch.cost_model import (NOMINAL_DEVICES, CostModel, WidthCurve,
+                                     dryrun_provenance)
+from repro.launch.roofline import cell_roofline, full_table, load_cells
+
+WIDTHS = (1, 2, 8, 32, 64, 128, 256, 512, 1024)
+
+
+@pytest.fixture(scope="module")
+def model() -> CostModel:
+    return CostModel.analytic(PRETRAIN_ARCHS)
+
+
+# ---------------------------------------------------------------- curves
+
+@pytest.mark.parametrize("arch", PRETRAIN_ARCHS)
+def test_efficiency_invariants(model, arch):
+    """efficiency(1) == 1, <= 1 everywhere, monotone non-increasing."""
+    c = model.curve(arch)
+    assert c is not None
+    assert c.efficiency(1) == 1.0
+    effs = [c.efficiency(w) for w in WIDTHS]
+    assert all(e <= 1.0 for e in effs)
+    assert all(a >= b for a, b in zip(effs, effs[1:]))
+
+
+@pytest.mark.parametrize("arch", PRETRAIN_ARCHS)
+def test_rate_nominal_is_exactly_one(model, arch):
+    """The bit-exactness anchor: at the curve's own width the progress
+    rate is *exactly* 1.0 (same float expression divided by itself)."""
+    c = model.curve(arch)
+    assert c.rate(c.n_devices) == 1.0
+    assert c.n_devices == NOMINAL_DEVICES
+
+
+@pytest.mark.parametrize("arch", PRETRAIN_ARCHS)
+def test_shrink_sublinear_grow_superlinear_cost(model, arch):
+    """Shrinking hurts less than linearly (the collective term does not
+    grow), regrowing gains less than linearly — the MegaScale-flavored
+    behavior the replay's repricing relies on."""
+    c = model.curve(arch)
+    w0 = c.n_devices
+    for w in WIDTHS:
+        if w < w0:
+            assert c.rate(w) > w / w0
+        elif w > w0:
+            assert 1.0 < c.rate(w) < w / w0
+    rates = [c.rate(w) for w in WIDTHS]
+    assert all(a < b for a, b in zip(rates, rates[1:]))  # monotone in w
+
+
+@pytest.mark.parametrize("gpus", (8, 32, 96, 512, 1024))
+def test_job_curve_reanchored_at_job_width(model, gpus):
+    """job_curve anchors rate()==1.0 at the *job's* width, with the same
+    curve shape (step times identical to the nominal-width curve)."""
+    jc = model.job_curve("internlm-7b", gpus)
+    assert jc.rate(gpus) == 1.0
+    nom = model.curve("internlm-7b")
+    for w in WIDTHS:
+        assert jc.step_time(w) == nom.step_time(w)
+    assert model.job_curve("internlm-7b", gpus) is jc      # cached
+
+
+def test_curve_unknown_arch_is_none(model):
+    assert model.curve("no-such-arch") is None
+    assert model.job_curve("no-such-arch", 256) is None
+
+
+def test_widthcurve_repr_and_step_time():
+    c = WidthCurve("x", 4, work_s=8.0, coll_s=2.0)
+    assert c.step_time(4) == 4.0 and c.step_time(1) == 10.0
+    assert c.t_nom == 4.0
+    assert "x" in repr(c)
+
+
+# ------------------------------------------------------ analytic fallback
+
+def test_analytic_moe_heavier_than_dense(model):
+    """The fallback's one hard promise: MoE archs cost several times more
+    collective bytes per useful FLOP than dense, and carry a2a traffic."""
+    def per_flop(arch):
+        cell = model.cell(arch)
+        return cell.collective_bytes / cell.model_flops
+    dense = per_flop("nemotron-4-15b")
+    for moe in ("deepseek-v2-lite-16b", "mixtral-8x22b"):
+        assert per_flop(moe) > 1.5 * dense
+        assert model.cell(moe).a2a_bytes > 0
+    assert model.cell("nemotron-4-15b").a2a_bytes == 0
+
+
+def test_analytic_deterministic(model):
+    again = CostModel.analytic(PRETRAIN_ARCHS)
+    assert again.cells == model.cells
+
+
+def test_analytic_unknown_arch_counted():
+    m = CostModel.analytic(("internlm-7b", "definitely-not-an-arch"))
+    assert m.skipped == {"unknown_arch": 1}
+    assert m.archs() == ["internlm-7b"]
+
+
+def test_load_empty_tree_falls_back(tmp_path):
+    m = CostModel.load(str(tmp_path / "nothing"), archs=("internlm-7b",))
+    assert m.skipped.get("analytic_fallback") == 1
+    assert m.cell("internlm-7b").source == "analytic"
+    bare = CostModel.load(str(tmp_path / "nothing"), archs=("internlm-7b",),
+                          analytic_fallback=False)
+    assert bare.cells == {} and bare.curve("internlm-7b") is None
+
+
+# ------------------------------------------------- artifact-tree hardening
+
+def _record(arch="smollm-360m", shape="train_4k", **over) -> dict:
+    rec = {"arch": arch, "shape": shape, "kind": "train", "seq_len": 4096,
+           "global_batch": 256, "n_devices": 256, "status": "ok",
+           "cost": {"flops": 1.4e12, "bytes_accessed": 6.1e10},
+           "memory": {"argument_size_in_bytes": 7.3e7,
+                      "temp_size_in_bytes": 8.9e9},
+           "collectives": {"total_bytes_per_device": 2.8e9},
+           "calibrated": {"flops": 1.0e13, "bytes_accessed": 8.1e11,
+                          "coll_total": 2.1e10,
+                          "coll_all-to-all": 5.0e8}}
+    rec.update(over)
+    return rec
+
+
+def _tree(tmp_path, files: dict) -> str:
+    """files: {"arch/name.json": record-or-raw-string}."""
+    root = tmp_path / "dryrun"
+    for rel, content in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        if isinstance(content, str):
+            p.write_text(content)
+        else:
+            p.write_text(json.dumps(content))
+    return str(root)
+
+
+def test_load_cells_skips_garbage_keeps_good(tmp_path):
+    art = _tree(tmp_path, {
+        "smollm-360m/train_4k.json": _record(),
+        "smollm-360m/truncated.json": '{"arch": "smollm-360m", "cost"',
+        "smollm-360m/list.json": "[1, 2, 3]",
+    })
+    skipped: dict = {}
+    recs = load_cells(art, skipped=skipped)
+    assert len(recs) == 1 and recs[0]["arch"] == "smollm-360m"
+    assert skipped == {"unreadable_json": 1, "not_a_record": 1}
+
+
+def test_cell_roofline_counts_each_reason():
+    skipped: dict = {}
+    assert cell_roofline("nope", skipped=skipped) is None
+    assert cell_roofline(_record(status="failed"), skipped=skipped) is None
+    assert cell_roofline({"status": "ok"}, skipped=skipped) is None
+    assert cell_roofline(_record(seq_len="huh"), skipped=skipped) is None
+    assert cell_roofline(_record(arch="not-an-arch"),
+                         skipped=skipped) is None
+    assert skipped == {"not_a_record": 1, "status_failed": 1,
+                       "malformed_record": 2, "unknown_arch": 1}
+    # non-dict calibrated/cost/collectives blobs degrade, not raise
+    r = cell_roofline(_record(calibrated=None, collectives="x"))
+    assert r is not None and r.calibrated is False
+    assert r.collective_bytes == 0.0
+
+
+def test_full_table_and_model_survive_mixed_tree(tmp_path):
+    art = _tree(tmp_path, {
+        "smollm-360m/train_4k.json": _record(),
+        "smollm-360m/failed.json": _record(shape="prefill_32k",
+                                           status="compile_error"),
+        "weird/bad.json": '["not", "a", "dict"]',
+        "weird/mystery.json": _record(arch="mystery", shape="train_4k"),
+    })
+    skipped: dict = {}
+    rows = full_table(art, skipped=skipped)
+    assert [r.arch for r in rows] == ["smollm-360m"]
+    assert skipped == {"status_compile_error": 1, "not_a_record": 1,
+                       "unknown_arch": 1}
+    m = CostModel.load(art, archs=("internlm-7b",))
+    cell = m.cell("smollm-360m")
+    assert cell.source == "calibrated" and cell.a2a_bytes == 5.0e8
+    assert m.cell("internlm-7b").source == "analytic"
+    assert m.skipped["analytic_fallback"] == 1
+
+
+# ----------------------------------------------------- dryrun provenance
+
+def test_provenance_identity_and_sensitivity(tmp_path):
+    art = _tree(tmp_path, {
+        "smollm-360m/train_4k.json": _record(),
+        "smollm-360m/failed.json": _record(shape="prefill_32k",
+                                           status="oom"),
+    })
+    prov = dryrun_provenance(art)
+    assert prov["archs"] == ["smollm-360m"]
+    assert prov["n_cells"] == 1 and prov["n_calibrated"] == 1
+    assert prov == dryrun_provenance(art)          # deterministic
+    # identity is the cell *set*, not the measured numbers
+    bumped = _record()
+    bumped["calibrated"]["flops"] *= 1.01
+    art2 = _tree(tmp_path / "b", {"smollm-360m/train_4k.json": bumped,
+                                  "smollm-360m/failed.json":
+                                  _record(shape="prefill_32k",
+                                          status="oom")})
+    assert dryrun_provenance(art2)["fingerprint"] == prov["fingerprint"]
+    # ... but a new cell, or losing calibration, changes it
+    art3 = _tree(tmp_path / "c", {
+        "smollm-360m/train_4k.json": _record(),
+        "internlm-7b/train_4k.json": _record(arch="internlm-7b")})
+    assert dryrun_provenance(art3)["fingerprint"] != prov["fingerprint"]
+    art4 = _tree(tmp_path / "d",
+                 {"smollm-360m/train_4k.json": _record(calibrated={})})
+    assert dryrun_provenance(art4)["fingerprint"] != prov["fingerprint"]
+    empty = dryrun_provenance(str(tmp_path / "missing"))
+    assert empty["n_cells"] == 0 and len(empty["fingerprint"]) == 8
+
+
+# ----------------------------------------------------- workload tagging
+
+def test_arch_tagging_leaves_population_bit_identical():
+    plain = generate_jobs(KALOS, seed=11, n_jobs=3000, best_effort_frac=0.3)
+    tagged = generate_jobs(KALOS, seed=11, n_jobs=3000,
+                           best_effort_frac=0.3, arch_frac=0.6)
+    assert len(plain) == len(tagged)
+    n_tagged = 0
+    for a, b in zip(plain, tagged):
+        assert a.arch is None
+        if b.arch is not None:
+            n_tagged += 1
+            assert b.jtype == "pretrain"
+            assert b.arch in PRETRAIN_ARCHS
+        for f in ("job_id", "jtype", "gpus", "submit_min", "duration_min",
+                  "best_effort"):
+            assert getattr(a, f) == getattr(b, f)
+    assert n_tagged > 0
+    again = generate_jobs(KALOS, seed=11, n_jobs=3000,
+                          best_effort_frac=0.3, arch_frac=0.6)
+    assert [j.arch for j in again] == [j.arch for j in tagged]
+
+
+def test_arch_pool_override():
+    jobs = generate_jobs(KALOS, seed=5, n_jobs=2000, arch_frac=1.0,
+                         arch_pool=("internlm-7b",))
+    archs = {j.arch for j in jobs if j.jtype == "pretrain"}
+    assert archs == {"internlm-7b"}
+    assert all(j.arch is None for j in jobs if j.jtype != "pretrain")
+
+
+# ------------------------------------------------- replay integration
+
+def _cfg(**over) -> ReplayConfig:
+    kw = dict(injector=FailureInjector(seed=1, rate_scale=2.0),
+              diagnose=True, elastic=True, placement=True,
+              reshard_cost_min=1.0, backfill="easy")
+    kw.update(over)
+    return ReplayConfig(**kw)
+
+
+def _replay(jobs, **cfg_over) -> dict:
+    return replay_trace(jobs, KALOS.n_gpus, reserved_frac=0.97,
+                        config=_cfg(**cfg_over)).summary()
+
+
+def test_unknown_runtime_model_raises():
+    jobs = generate_jobs(KALOS, seed=0, n_jobs=10)
+    with pytest.raises(ValueError, match="runtime_model"):
+        _replay(jobs, runtime_model="quadratic")
+
+
+def test_nominal_mode_ignores_arch_tags():
+    """runtime_model="nominal" (the default) must be bit-exact whether or
+    not the population carries arch tags — tagging alone changes nothing."""
+    plain = _replay(generate_jobs(KALOS, seed=11, n_jobs=5000,
+                                  best_effort_frac=0.3))
+    tagged = _replay(generate_jobs(KALOS, seed=11, n_jobs=5000,
+                                   best_effort_frac=0.3, arch_frac=0.8))
+    assert "runtime_model" not in plain
+    assert plain == tagged
+
+
+def test_roofline_mode_untagged_is_exact_nominal_parity():
+    """With no arch tags every job prices nominally, so roofline mode is
+    bit-exact against nominal — minus only the runtime_model stats key."""
+    jobs = lambda: generate_jobs(KALOS, seed=11, n_jobs=5000,  # noqa: E731
+                                 best_effort_frac=0.3)
+    nominal = _replay(jobs())
+    roof = _replay(jobs(), runtime_model="roofline",
+                   cost_model=CostModel.analytic(PRETRAIN_ARCHS))
+    stats = roof.pop("runtime_model")
+    assert stats["jobs_tagged"] == 0 and stats["jobs_modeled"] == 0
+    assert roof == nominal
+
+
+def test_roofline_mode_reprices_tagged_jobs():
+    jobs = lambda: generate_jobs(KALOS, seed=11, n_jobs=5000,  # noqa: E731
+                                 best_effort_frac=0.3, arch_frac=0.8)
+    nominal = _replay(jobs())
+    roof = _replay(jobs(), runtime_model="roofline",
+                   cost_model=CostModel.analytic(PRETRAIN_ARCHS))
+    stats = roof.pop("runtime_model")
+    assert stats["model"] == "roofline"
+    assert stats["jobs_modeled"] > 0
+    assert stats["jobs_modeled"] <= stats["jobs_tagged"]
+    assert set(stats["archs"]) <= set(PRETRAIN_ARCHS)
+    assert roof != nominal           # the width curves actually repriced

@@ -76,10 +76,30 @@ def _noinject_summary() -> dict:
     return res.summary()
 
 
+def _roofline_summary() -> dict:
+    """``runtime_model="roofline"``: arch-tagged pretraining jobs reprice
+    elastic shrink/regrow through the cost model's width curves. Pinned
+    with the hermetic *analytic* model (no dryrun artifacts read), so the
+    fixture is reproducible on a bare checkout; the same trace replayed
+    nominally is covered by the existing goldens staying untouched."""
+    from repro.cluster.workload import PRETRAIN_ARCHS
+    from repro.launch.cost_model import CostModel
+    jobs = generate_jobs(KALOS, seed=3, n_jobs=20_000, best_effort_frac=0.3,
+                         arch_frac=0.8)
+    cfg = ReplayConfig(injector=FailureInjector(seed=1, rate_scale=2.0),
+                       diagnose=True, elastic=True, placement=True,
+                       reshard_cost_min=1.0, backfill="easy",
+                       runtime_model="roofline",
+                       cost_model=CostModel.analytic(PRETRAIN_ARCHS))
+    res = replay_trace(jobs, KALOS.n_gpus, reserved_frac=0.97, config=cfg)
+    return res.summary()
+
+
 CASES = {
     "full_feature_50k": _full_feature_summary,
     "easy_pool_20k": _easy_pool_summary,
     "noinject_greedy_50k": _noinject_summary,
+    "roofline_20k": _roofline_summary,
 }
 
 
