@@ -1,0 +1,167 @@
+"""Serving-cluster replay at Seren scale (§6.2 inference-shaped work).
+
+Replays the full 1M-request diurnal+bursty trace (fast mode: 20k)
+through ``repro.cluster.serve_replay`` — continuous batching with
+per-event admission, prefill/decode disaggregation, paged KV with
+LIFO eviction + recompute — and reports:
+
+  * throughput — the headline 1M-request replay runs alone against an
+    advisory wall target, and a fixed 100k-request probe interleaved
+    with CPU calibration yields the ``events_per_calib_serve`` row that
+    ``benchmarks.check_regression`` gates CI on (``events_per_calib``
+    carries the same value under the trajectory-standard name);
+  * SLOs — p50/p99 TTFT and TPOT plus attainment against the config
+    targets, priced through the committed prefill/decode cost cells
+    (``CostModel.load``, analytic fallback) — the headline rows are
+    therefore dryrun-fingerprint-stamped (``DRYRUN_STAMPED_BENCHES``),
+    while the *gated* probe prices hermetically via
+    ``CostModel.analytic`` so the gate stays armed across cell-set
+    changes;
+  * KV pressure — eviction/recompute volume and the conservation law
+    (evicted tokens == recompute prefill tokens) as a pass/fail row,
+    plus a deliberately KV-starved world exercising eviction churn.
+
+The full scorecard is written to ``artifacts/bench/serve_summary.json``
+next to the standard row artifact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import (ARTIFACTS, Row, calibrated_probe, emit,
+                               run_worlds)
+from repro.cluster import (ServeReplayConfig, generate_requests,
+                           replay_requests)
+from repro.launch.cost_model import CostModel
+
+N_REQ_FULL = 1_000_000           # one day of Seren-scale serving traffic
+N_REQ_FAST = 20_000
+N_REQ_PROBE = 100_000            # fixed CI-gate throughput probe
+ARCH = "internlm-7b"
+
+# 1M-request full-fleet replay on CPU: ~15 s quiet on the dev machine
+# (~4M events through the vtime batching engine). Advisory bound sized
+# for a throttled shared runner; the gated number is the calibrated
+# probe below.
+FULL_WALL_TARGET_S = 90.0
+
+
+def _probe_cfg() -> ServeReplayConfig:
+    """Hermetic probe config: analytic rates, no artifacts read."""
+    return ServeReplayConfig(cost_model=CostModel.analytic((ARCH,)))
+
+
+# -- parallel worlds (module-level: must pickle) ----------------------------
+
+def _world_probe() -> float:
+    """Calibrated engine-throughput probe on a fixed 100k-request trace
+    (30-minute horizon, so fleet load matches the 1M/day headline)."""
+    reqs = generate_requests(N_REQ_PROBE, seed=0, horizon_min=43.2)
+    cfg = _probe_cfg()
+
+    def workload() -> float:
+        for r in reqs:     # reset the engine-written per-request state
+            r.ttft_min = r.done_min = float("inf")
+            r.decoded = r.evictions = 0
+            r._res += 1
+        return replay_requests(reqs, cfg).events_processed
+
+    return calibrated_probe(workload)
+
+
+def _world_kv_tight() -> dict:
+    """KV-starved fleet: quarter-size page pool forces eviction churn;
+    returns the summary so eviction/recompute accounting lands in rows."""
+    reqs = generate_requests(N_REQ_FAST, seed=2, horizon_min=30.0)
+    cfg = ServeReplayConfig(cost_model=CostModel.analytic((ARCH,)),
+                            kv_pages=1024, n_decode=8, n_prefill=2)
+    return replay_requests(reqs, cfg).summary()
+
+
+def run(fast: bool = False) -> list[Row]:
+    n_req = N_REQ_FAST if fast else N_REQ_FULL
+    horizon = 30.0 if fast else 1440.0
+    reqs = generate_requests(n_req, seed=0, horizon_min=horizon)
+
+    # 1) headline: full-fleet replay priced off the committed cells —
+    #    runs alone so the wall number is uncontended
+    cm = CostModel.load(archs=(ARCH,))
+    t0 = time.perf_counter()
+    res = replay_requests(reqs, ServeReplayConfig(cost_model=cm))
+    wall = time.perf_counter() - t0
+    s = res.summary()
+
+    # 2) the calibrated CI-gate probe and the KV-pressure world overlap
+    out = run_worlds({"probe": (_world_probe, ()),
+                      "kv_tight": (_world_kv_tight, ())})
+    calib = out["probe"]
+    tight = out["kv_tight"]
+
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, "serve_summary.json"), "w") as f:
+        json.dump({"summary": s, "kv_tight": tight}, f, indent=1)
+
+    slo = s["slo"]
+    kv = s["kv"]
+    wall_target = 30.0 if fast else FULL_WALL_TARGET_S
+    conserved = (kv["evicted_tokens"] == kv["recompute_prefill_tokens"]
+                 and tight["kv"]["evicted_tokens"]
+                 == tight["kv"]["recompute_prefill_tokens"])
+    rows = [
+        Row("serve", "n_requests", float(n_req),
+            ">=1M requests (full mode)", "", fast or n_req >= 1_000_000),
+        Row("serve", "replay_wall_s", wall,
+            f"<={wall_target:.0f} s on CPU", "s", wall <= wall_target),
+        Row("serve", "events_per_sec",
+            s["events_processed"] / max(wall, 1e-9), "", "ev/s"),
+        # the gated rows: "events_per_calib" is the trajectory-standard
+        # name, "events_per_calib_serve" the bench-specific alias — same
+        # hermetic measurement (see module docstring)
+        Row("serve", "events_per_calib", calib,
+            "CI regression gate (calibrated)", ""),
+        Row("serve", "events_per_calib_serve", calib,
+            "CI regression gate (calibrated)", ""),
+        Row("serve", "completed", float(s["completed"]),
+            "all admitted requests finish", "",
+            s["completed"] + s["rejected"] == n_req),
+        Row("serve", "ttft_p50_s", s["ttft"]["p50_s"], "", "s"),
+        Row("serve", "ttft_p99_s", s["ttft"]["p99_s"],
+            "burst tail (diurnal+bursty trace)", "s"),
+        Row("serve", "tpot_p50_ms", s["tpot"]["p50_ms"],
+            "near full-batch step time", "ms"),
+        Row("serve", "tpot_p99_ms", s["tpot"]["p99_ms"], "", "ms"),
+        Row("serve", "slo_ttft_attainment", slo["ttft_attainment"],
+            f"vs {slo['ttft_target_s']:.0f} s target", ""),
+        Row("serve", "slo_joint_attainment", slo["joint_attainment"],
+            "TTFT and TPOT jointly", "",
+            0.0 < slo["joint_attainment"] <= 1.0),
+        Row("serve", "batch_mean_occupancy", s["batch"]["mean_occupancy"],
+            f"max {s['batch']['max_batch']}", ""),
+        Row("serve", "kv_peak_pages_frac", kv["peak_pages_frac"],
+            "<=1 (conservative page bound)", "",
+            kv["peak_pages_frac"] <= 1.0 + 1e-9),
+        Row("serve", "kv_evictions", float(kv["evictions"]), "", ""),
+        Row("serve", "kv_conservation_ok", float(conserved),
+            "evicted == recomputed, both worlds", "", conserved),
+        Row("serve", "kv_tight_evictions",
+            float(tight["kv"]["evictions"]),
+            "starved pool must evict", "",
+            tight["kv"]["evictions"] > 0),
+        Row("serve", "kv_tight_joint_attainment",
+            tight["slo"]["joint_attainment"],
+            "<= headline (recompute tax)", ""),
+        Row("serve", "decoded_tok_per_s",
+            s["throughput"]["decoded_tok_per_s"], "", "tok/s"),
+        Row("serve", "rates_source_calibrated",
+            float(res.rates_source == "calibrated/calibrated"), "",
+            "", None),
+    ]
+    emit(rows, "serve")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(fast="--fast" in sys.argv)

@@ -13,6 +13,10 @@ regression in the gated benches:
     borrowing), gating the free-GPU-ledger machinery specifically;
   * ``evalsched``  — calibrated decoupled-scheduler throughput (repeated
     full §6.2 schedules, engine completions per calibrated op);
+  * ``serve``      — ``events_per_calib`` / ``events_per_calib_serve``:
+    the fixed 100k-request serving-replay probe (continuous batching +
+    KV paging), hermetically priced so the gate is independent of the
+    committed dryrun cell set;
   * ``detection``  — two-round sweep probe savings vs naive pairwise
     (deterministic, seeded: any drop is a real algorithmic regression);
   * ``checkpoint`` — sync/async stall-reduction ratios (a ratio of two
@@ -60,6 +64,12 @@ GATES: dict[str, list[tuple[str, str, Optional[float]]]] = {
     "replay": [("events_per_calib", "higher", None),
                ("events_per_calib_full", "higher", None)],
     "pool": [("events_per_calib", "higher", None)],
+    # the serving replay's probe prices hermetically (CostModel.analytic),
+    # so the gate stays armed across dryrun cell-set changes even though
+    # the bench's headline rows are dryrun-stamped; the _serve alias is
+    # gated for the same can't-silently-vanish reason as the replay rows
+    "serve": [("events_per_calib", "higher", None),
+              ("events_per_calib_serve", "higher", None)],
     # the fair-share engine's rate recomputation is dict/cache-bound while
     # the calibration chunk is heap-bound, so the ratio cancels contention
     # less cleanly than the replay probes (observed ~1.2-1.4x run-to-run

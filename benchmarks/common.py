@@ -142,7 +142,7 @@ def set_replint_stamp(verdict: dict) -> None:
 # roofline row is never judged against a baseline built from a different
 # cell set (different archs, or calibrated vs raw-HLO records).
 _DRYRUN_STAMP: "Optional[dict]" = None
-DRYRUN_STAMPED_BENCHES = ("roofline", "moe_comm")
+DRYRUN_STAMPED_BENCHES = ("roofline", "moe_comm", "serve")
 
 
 def set_dryrun_stamp(provenance: dict) -> None:

@@ -2,8 +2,8 @@
 
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME] [--profile]
 
-After a run that produced all three gated throughput artifacts
-(replay/pool/evalsched), the runner consolidates their ``events_per_calib``
+After a run that produced all four gated throughput artifacts
+(replay/pool/evalsched/serve), the runner consolidates their ``events_per_calib``
 values into ``BENCH_replay.json`` — a per-commit *trajectory* of the
 calibrated throughput history, including the replay bench's per-knob rows
 (``replay_legacy`` / ``replay_placement`` / ``replay_best_effort`` /
@@ -28,12 +28,12 @@ import traceback
 from benchmarks import (bench_checkpoint, bench_detection, bench_diagnosis,
                         bench_evalsched, bench_moe_comm, bench_pool,
                         bench_recovery, bench_replay, bench_roofline,
-                        bench_trace)
+                        bench_serve, bench_trace)
 from benchmarks.common import (ARTIFACTS, emit, set_dryrun_stamp,
                                set_replint_stamp)
 
 # benches whose calibrated throughput forms the consolidated trajectory
-TRAJECTORY_BENCHES = ("replay", "pool", "evalsched")
+TRAJECTORY_BENCHES = ("replay", "pool", "evalsched", "serve")
 # per-knob replay rows recorded alongside (trajectory key -> source metric);
 # optional: absent from an artifact (e.g. a pre-PR-5 baseline) -> skipped.
 # The roofline/moe_comm keys track the calibrated cost-model rows in the
@@ -47,6 +47,8 @@ TRAJECTORY_EXTRAS = {
     "roofline_worst_frac": ("roofline", "worst_roofline_frac"),
     "moe_deepseek_over_dense": ("moe_comm", "deepseek_over_dense"),
     "moe_mixtral_over_dense": ("moe_comm", "mixtral_over_dense"),
+    "serve_joint_attainment": ("serve", "slo_joint_attainment"),
+    "serve_decoded_tok_per_s": ("serve", "decoded_tok_per_s"),
 }
 TRAJECTORY_BASELINE = os.path.join("artifacts", "bench", "BENCH_replay.json")
 
@@ -183,6 +185,7 @@ BENCHES = {
     "recovery": bench_recovery,        # §5.3 / Fig. 14
     "moe_comm": bench_moe_comm,        # Appendix A.6
     "roofline": bench_roofline,        # §Roofline (dry-run artifacts)
+    "serve": bench_serve,              # §6.2 serving-cluster replay
 }
 # heavyweight (forces 512 XLA host devices; run explicitly):
 #   python -m benchmarks.bench_parallelism   # Fig. 10/11 V1-vs-V2

@@ -1,0 +1,125 @@
+"""Serving-cluster replay end-to-end: the inference-shaped counterpart of
+``examples/replay_trace.py`` (§6.2 decoupled-eval motivation, north-star
+"millions of users" serving scale).
+
+Walkthrough of ``repro.cluster.serve_replay``:
+
+  1. generate a diurnal + bursty request trace
+     (``workload.generate_requests`` — lognormal prompt/output lengths,
+     sine-of-day arrival thinning, a slice of traffic re-homed onto burst
+     centers);
+  2. replay it through a disaggregated serving fleet: ``--prefill``
+     instances run prompt passes (TTFT = arrival -> first token, queueing
+     included), ``--decode`` instances run continuous batching — a shared
+     per-slot progress clock prices every resident's next token at the
+     occupancy-dependent step time from the cost model's decode cell;
+  3. print the serving scorecard: p50/p95/p99 TTFT and TPOT, SLO
+     attainment against the config targets, batch occupancy, and the
+     paged-KV pressure ledger (evictions, recomputed prefill tokens);
+  4. with ``--kv-pages`` small enough, watch the LIFO eviction +
+     recompute loop kick in: evicted requests keep their generated
+     tokens but must re-prefill ``prompt + decoded`` through the
+     prefill fleet before decoding resumes — every evicted KV token
+     shows up again as a recomputed prefill token, a conservation law
+     the test suite pins.
+
+Rates come from the committed prefill/decode dry-run cells when present
+(``CostModel.load``) and the deterministic analytic roofline otherwise —
+pass ``--analytic`` to force the hermetic path CI uses.
+
+  PYTHONPATH=src python examples/serve_trace.py \
+      [--requests N] [--horizon MIN] [--arch A] [--analytic] \
+      [--prefill N] [--decode N] [--kv-pages N] [--max-batch N]
+"""
+import argparse
+import time
+
+from repro.cluster import (ServeReplayConfig, generate_requests,
+                           replay_requests)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=100_000,
+                    help="synthetic trace size (default 100k)")
+    ap.add_argument("--horizon", type=float, default=144.0,
+                    help="arrival window in minutes (default 144, i.e. "
+                         "100k requests at the 1M/day Seren rate)")
+    ap.add_argument("--arch", default="internlm-7b")
+    ap.add_argument("--analytic", action="store_true",
+                    help="force the hermetic analytic cost model "
+                         "(no dryrun artifacts read)")
+    ap.add_argument("--prefill", type=int, default=4,
+                    help="prefill instances (8 GPUs each)")
+    ap.add_argument("--decode", type=int, default=16,
+                    help="decode instances (8 GPUs each)")
+    ap.add_argument("--kv-pages", type=int, default=4096,
+                    help="KV pages per decode instance (16 tokens/page); "
+                         "try 1024 to force eviction churn")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="continuous-batching occupancy cap")
+    args = ap.parse_args()
+
+    print(f"=== generating {args.requests} requests over "
+          f"{args.horizon:.0f} min (diurnal + bursty) ===")
+    reqs = generate_requests(args.requests, seed=0,
+                             horizon_min=args.horizon)
+    n_prompt = sum(r.prompt_tokens for r in reqs)
+    n_out = sum(r.out_tokens for r in reqs)
+    print(f"  {n_prompt / 1e6:.1f}M prompt tokens, "
+          f"{n_out / 1e6:.1f}M output tokens")
+
+    cm = None
+    if args.analytic:
+        from repro.launch.cost_model import CostModel
+        cm = CostModel.analytic((args.arch,))
+    cfg = ServeReplayConfig(arch=args.arch, cost_model=cm,
+                            n_prefill=args.prefill, n_decode=args.decode,
+                            kv_pages=args.kv_pages,
+                            max_batch=args.max_batch)
+
+    print(f"\n=== replaying through {args.prefill} prefill + "
+          f"{args.decode} decode instances ({args.arch}) ===")
+    t0 = time.perf_counter()
+    res = replay_requests(reqs, cfg)
+    wall = time.perf_counter() - t0
+    s = res.summary()
+    print(f"replayed in {wall:.1f}s ({s['events_processed']} events); "
+          f"rates: {s['cost_model']['source']} "
+          f"(prefill {s['cost_model']['prefill_tok_s']:.0f} tok/s, "
+          f"decode {s['cost_model']['decode_fixed_ms']:.0f} ms "
+          f"+ {s['cost_model']['decode_per_seq_ms']:.2f} ms/seq)")
+
+    t, p = s["ttft"], s["tpot"]
+    print(f"  TTFT p50/p95/p99 = {t['p50_s']:.2f}/{t['p95_s']:.2f}/"
+          f"{t['p99_s']:.2f} s (mean {t['mean_s']:.2f})")
+    print(f"  TPOT p50/p95/p99 = {p['p50_ms']:.0f}/{p['p95_ms']:.0f}/"
+          f"{p['p99_ms']:.0f} ms")
+    slo = s["slo"]
+    print(f"  SLO attainment: TTFT<={slo['ttft_target_s']:.0f}s "
+          f"{slo['ttft_attainment']:.1%}, "
+          f"TPOT<={slo['tpot_target_ms']:.0f}ms "
+          f"{slo['tpot_attainment']:.1%}, "
+          f"joint {slo['joint_attainment']:.1%}")
+    b = s["batch"]
+    print(f"  decode occupancy: mean {b['mean_occupancy']:.1f} / "
+          f"peak {b['peak_occupancy']} (cap {b['max_batch']}); "
+          f"mean admit wait {b['admit_wait_mean_min'] * 60:.2f} s")
+    kv = s["kv"]
+    print(f"  KV: peak {kv['peak_pages']:.0f}/{kv['pages_per_instance']} "
+          f"pages ({kv['peak_pages_frac']:.0%}); "
+          f"{kv['evictions']} evictions, "
+          f"{kv['evicted_tokens']} tokens evicted == "
+          f"{kv['recompute_prefill_tokens']} recomputed (conservation)")
+    th = s["throughput"]
+    print(f"  throughput: {th['decoded_tok_per_s']:.0f} decoded tok/s, "
+          f"{th['requests_per_min']:.0f} req/min; "
+          f"{s['completed']} completed, {s['rejected']} rejected")
+    fl = s["fleet"]
+    print(f"  fleet: {fl['n_prefill']}+{fl['n_decode']} instances x "
+          f"{fl['gpus_per_instance']} GPUs on {fl['nodes_used']} nodes "
+          f"(of {fl['total_gpus']} GPUs)")
+
+
+if __name__ == "__main__":
+    main()

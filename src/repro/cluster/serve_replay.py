@@ -1,0 +1,577 @@
+"""Serving-cluster replay: the inference counterpart of ``replay_trace``.
+
+One event loop drives a disaggregated serving fleet through a request
+trace (``workload.generate_requests``) at Seren scale — 1M+ requests in
+seconds of wall time — with the mechanisms the distributed-LLM-serving
+literature treats as defining (continuous batching, prefill/decode
+disaggregation, paged KV with eviction) modeled explicitly:
+
+  * **Prefill fleet** — ``n_prefill`` instances of ``gpus_per_instance``
+    GPUs each, a FIFO k-server queue: a request's prompt pass (and any
+    KV-recompute pass after an eviction) takes ``prompt_tokens`` over the
+    instance's modeled token throughput. TTFT is arrival → first prefill
+    completion, queueing included.
+  * **Decode fleet** — ``n_decode`` instances running continuous batching
+    with per-event admission: an instance decodes one token per resident
+    request per step, and the step time is an affine function of batch
+    occupancy (``ServeRates.step_time_s``), so all residents share a
+    common per-slot progress clock (``vtime``, in tokens). Membership
+    changes (admission, completion, eviction) reprice the whole batch at
+    once — the same epoch-stamped lazy-deletion-heap pattern as the
+    training replay, O(log n) per membership change instead of O(tokens).
+  * **Paged KV** — each decode instance owns ``kv_pages`` pages of
+    ``page_tokens`` tokens. Residents' KV grows one token per decoded
+    token; the engine enforces the *conservative page bound*
+    ``sum_i ceil(tokens_i / page) <= tokens_total / page + batch`` so
+    pages can never exceed capacity. When growth exhausts the bound, the
+    newest resident is evicted LIFO: its generated tokens are kept, its
+    KV is lost, and it re-enters the *prefill* queue for a recompute pass
+    over ``prompt + decoded`` tokens before decoding resumes — the
+    eviction/recompute accounting the property tests pin.
+  * **Pricing** — all rates come from ``launch.cost_model``'s
+    prefill/decode ``CostCell``s (``CostModel.serve_rates``): committed
+    dry-run artifacts when present, the deterministic analytic fallback
+    otherwise, same provenance discipline as the roofline replay.
+
+The fleet is stood up through a :class:`~repro.cluster.replay.NodeLedger`
+(instances allocate concrete node GPUs), so serving placement shares the
+training replay's physical accounting and the stretch goal of
+co-scheduling both on one ledger stays a config change, not a rewrite.
+
+Determinism contract: no wall clock, no RNG (the trace carries all the
+randomness), flat heap tuples ordered by ``(time, seq)``; the module is
+on replint's hot list, so every class is slotted. ``summary()`` follows
+the ``ReplayResult.summary()`` schema conventions (see README "Result
+schemas"): stable top-level keys, plain-scalar leaves, memoized and
+deep-copied so repeated calls are side-effect-free.
+
+  >>> from repro.cluster import (ServeReplayConfig, generate_requests,
+  ...                            replay_requests)
+  >>> reqs = generate_requests(200_000, seed=0, horizon_min=300.0)
+  >>> res = replay_requests(reqs, ServeReplayConfig())
+  >>> res.summary()["slo"]["joint_attainment"]  # doctest: +SKIP
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import heapq
+import math
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.cluster.replay import NodeLedger
+
+# event kinds (flat heap tuples: (t_min, seq, kind, payload, epoch))
+_P_DONE, _D_STEP, _D_EVICT = 0, 1, 2
+_EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class ServeReplayConfig:
+    """Frozen knob set for one serving replay.
+
+    Fleet shape: ``n_prefill + n_decode`` instances of
+    ``gpus_per_instance`` GPUs are allocated node-locally out of
+    ``total_gpus`` (``node_gpus`` per node) through a ``NodeLedger``.
+    ``max_batch`` caps continuous-batching occupancy per decode instance;
+    ``kv_pages`` * ``page_tokens`` is its KV capacity. Admission requires
+    ``admit_headroom_tokens`` of growth room beyond the request's resident
+    KV so a fresh admission cannot trigger an instant eviction; an
+    eviction frees at least ``evict_headroom_tokens``. SLO targets are
+    what ``summary()['slo']`` grades attainment against. ``cost_model``
+    is a ``launch.cost_model.CostModel`` (or anything with a
+    ``serve_rates(arch, gpus)``); ``None`` loads the committed dry-run
+    artifacts with analytic fallback, exactly like the training replay's
+    roofline mode."""
+    total_gpus: int = 256
+    node_gpus: int = 8
+    n_prefill: int = 4
+    n_decode: int = 16
+    gpus_per_instance: int = 8
+    max_batch: int = 64
+    kv_pages: int = 4096
+    page_tokens: int = 16
+    admit_headroom_tokens: int = 256
+    evict_headroom_tokens: int = 1024
+    arch: str = "internlm-7b"
+    cost_model: Optional[object] = None
+    ttft_slo_s: float = 10.0
+    tpot_slo_ms: float = 300.0
+
+
+class _DecodeInstance:
+    """Continuous-batching state for one decode instance.
+
+    ``vtime`` is the shared progress clock in *tokens per resident*: every
+    resident decodes at the same one-token-per-step rate, so a request
+    admitted at ``vtime`` v0 with r tokens remaining finishes when
+    ``vtime`` reaches v0 + r. Resident KV is the closed form
+    ``static + b * vtime - admit_vsum`` (``static`` sums residents'
+    tokens-at-admission, ``admit_vsum`` their admission vtimes), which
+    keeps token accounting exact under float accumulation — nothing
+    drifts because nothing is incrementally summed."""
+    __slots__ = ("idx", "b", "vtime", "t0", "rate", "static", "admit_vsum",
+                 "epoch", "ends", "batch", "sched_fv", "occ", "peak_bound")
+
+    def __init__(self, idx: int) -> None:
+        self.idx = idx
+        self.b = 0                 # current batch occupancy
+        self.vtime = 0.0           # tokens decoded per resident since start
+        self.t0 = 0.0              # wall minute of the last advance
+        self.rate = 0.0            # d vtime / d minute at current occupancy
+        self.static = 0.0          # sum of residents' tokens at admission
+        self.admit_vsum = 0.0      # sum of residents' admission vtimes
+        self.epoch = 0             # invalidates scheduled D_STEP/D_EVICT
+        self.ends: list = []       # (finish_vtime, seq, req, res) min-heap
+        self.batch: dict = {}      # req_id -> req, insertion-ordered (LIFO)
+        self.sched_fv = 0.0        # finish_vtime the live D_STEP targets
+        self.occ = 0.0             # time-integrated occupancy (batch-min)
+        self.peak_bound = 0.0      # max conservative page bound observed
+
+
+@dataclasses.dataclass(slots=True)
+class ServeReplayResult:
+    """Outcome of one serving replay; ``summary()`` is the stable API."""
+    requests: list
+    config: ServeReplayConfig
+    events_processed: int = 0
+    completed: int = 0
+    rejected_ids: list = dataclasses.field(default_factory=list)
+    stale_events: int = 0
+    # -- token conservation ledger (see tests/test_serve_replay) ------------
+    decoded_tokens: int = 0        # decode tokens produced (never re-decoded)
+    prefill_tokens: int = 0        # all tokens prefilled, recomputes included
+    recompute_prefill_tokens: int = 0   # prefill side of eviction recovery
+    evictions: int = 0
+    evicted_tokens: int = 0        # KV tokens dropped (== recompute charge)
+    # -- pressure / occupancy ------------------------------------------------
+    occ_time_min: float = 0.0      # sum over instances of integral(batch dt)
+    peak_batch: int = 0
+    kv_peak_pages: float = 0.0     # max conservative page bound, any instance
+    admit_wait_sum_min: float = 0.0
+    admit_wait_n: int = 0
+    horizon_min: float = 0.0       # last event timestamp
+    nodes_used: int = 0
+    rates_source: str = ""
+    rates_prefill_tok_s: float = 0.0
+    rates_decode_fixed_s: float = 0.0
+    rates_decode_per_seq_s: float = 0.0
+    # memoized summary() tree (same discipline as ReplayResult: built once,
+    # deep-copied on every return so callers cannot mutate the memo)
+    _summary: Optional[dict] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def summary(self) -> dict:
+        """JSON-ready serving scorecard: TTFT/TPOT tails, SLO attainment,
+        batch occupancy and KV pressure — the serving analogue of
+        ``ReplayResult.summary()`` and bound by the same schema contract
+        (README "Result schemas")."""
+        if self._summary is None:
+            self._summary = self._build_summary()
+        return copy.deepcopy(self._summary)
+
+    def _build_summary(self) -> dict:
+        cfg = self.config
+        # one pass: per finished request collect TTFT (s) and, when it
+        # decoded at all, TPOT (ms); out==1 requests pass the TPOT half of
+        # the joint SLO vacuously
+        ttft, tpot, tpot_padded = [], [], []
+        for r in self.requests:
+            if not math.isfinite(r.done_min):
+                continue
+            ttft.append(r.ttft_min * 60.0)
+            if r.out_tokens > 1:
+                ms = ((r.done_min - r.ttft_min)
+                      / (r.out_tokens - 1) * 60_000.0)
+                tpot.append(ms)
+                tpot_padded.append(ms)
+            else:
+                tpot_padded.append(0.0)
+        ttft_s = np.asarray(ttft, dtype=np.float64)
+        tpot_ms = np.asarray(tpot, dtype=np.float64)
+        horizon = self.horizon_min
+        decode_gpu_min = cfg.n_decode * max(horizon, _EPS)
+        n = len(self.requests)
+        ttft_ok = tpot_ok = joint = 0.0
+        if ttft_s.size:
+            ttft_hit = ttft_s <= cfg.ttft_slo_s
+            tpot_hit = (np.asarray(tpot_padded, dtype=np.float64)
+                        <= cfg.tpot_slo_ms)
+            ttft_ok = float(ttft_hit.mean())
+            tpot_ok = float((tpot_ms <= cfg.tpot_slo_ms).mean()) \
+                if tpot_ms.size else 1.0
+            joint = float((ttft_hit & tpot_hit).mean())
+        return {
+            "n_requests": n,
+            "completed": self.completed,
+            "rejected": len(self.rejected_ids),
+            "events_processed": self.events_processed,
+            "stale_events": self.stale_events,
+            "horizon_min": float(horizon),
+            "ttft": _tail_s(ttft_s),
+            "tpot": _tail_ms(tpot_ms),
+            "slo": {
+                "ttft_target_s": float(cfg.ttft_slo_s),
+                "tpot_target_ms": float(cfg.tpot_slo_ms),
+                "ttft_attainment": ttft_ok,
+                "tpot_attainment": tpot_ok,
+                "joint_attainment": joint,
+            },
+            "throughput": {
+                "decoded_tokens": self.decoded_tokens,
+                "prefill_tokens": self.prefill_tokens,
+                "decoded_tok_per_s": float(
+                    self.decoded_tokens / max(horizon * 60.0, _EPS)),
+                "requests_per_min": float(n / max(horizon, _EPS)),
+            },
+            "batch": {
+                "mean_occupancy": float(self.occ_time_min / decode_gpu_min),
+                "peak_occupancy": self.peak_batch,
+                "max_batch": cfg.max_batch,
+                "admit_wait_mean_min": float(
+                    self.admit_wait_sum_min / max(self.admit_wait_n, 1)),
+            },
+            "kv": {
+                "pages_per_instance": cfg.kv_pages,
+                "page_tokens": cfg.page_tokens,
+                "peak_pages": float(self.kv_peak_pages),
+                "peak_pages_frac": float(
+                    self.kv_peak_pages / max(cfg.kv_pages, 1)),
+                "evictions": self.evictions,
+                "evicted_tokens": self.evicted_tokens,
+                "recompute_prefill_tokens": self.recompute_prefill_tokens,
+            },
+            "fleet": {
+                "total_gpus": cfg.total_gpus,
+                "n_prefill": cfg.n_prefill,
+                "n_decode": cfg.n_decode,
+                "gpus_per_instance": cfg.gpus_per_instance,
+                "nodes_used": self.nodes_used,
+            },
+            "cost_model": {
+                "arch": cfg.arch,
+                "source": self.rates_source,
+                "prefill_tok_s": float(self.rates_prefill_tok_s),
+                "decode_fixed_ms": float(
+                    self.rates_decode_fixed_s * 1e3),
+                "decode_per_seq_ms": float(
+                    self.rates_decode_per_seq_s * 1e3),
+            },
+        }
+
+
+def _tail_s(arr: np.ndarray, qs=(50, 95, 99)) -> dict:
+    if arr.size == 0:
+        return {f"p{q}_s": 0.0 for q in qs} | {"n": 0, "mean_s": 0.0}
+    pcts = np.percentile(arr, qs)
+    out = {f"p{q}_s": float(v) for q, v in zip(qs, pcts)}
+    out["n"] = int(arr.size)
+    out["mean_s"] = float(arr.mean())
+    return out
+
+
+def _tail_ms(arr: np.ndarray, qs=(50, 95, 99)) -> dict:
+    if arr.size == 0:
+        return {f"p{q}_ms": 0.0 for q in qs} | {"n": 0, "mean_ms": 0.0}
+    pcts = np.percentile(arr, qs)
+    out = {f"p{q}_ms": float(v) for q, v in zip(qs, pcts)}
+    out["n"] = int(arr.size)
+    out["mean_ms"] = float(arr.mean())
+    return out
+
+
+def replay_requests(requests: list,
+                    config: Optional[ServeReplayConfig] = None
+                    ) -> ServeReplayResult:
+    """Replay a request trace through the serving fleet; see module doc.
+
+    ``requests`` are :class:`~repro.cluster.workload.RequestRecord`s; the
+    engine writes ``ttft_min`` / ``done_min`` / ``decoded`` / ``evictions``
+    into them (arrival-relative minutes) and returns the result object.
+    The trace need not be pre-sorted."""
+    cfg = config if config is not None else ServeReplayConfig()
+    if cfg.n_prefill < 1 or cfg.n_decode < 1:
+        raise ValueError("need at least one prefill and one decode instance")
+    need = (cfg.n_prefill + cfg.n_decode) * cfg.gpus_per_instance
+    if need > cfg.total_gpus:
+        raise ValueError(
+            f"fleet needs {need} GPUs but total_gpus={cfg.total_gpus}")
+    if cfg.kv_pages * cfg.page_tokens <= cfg.admit_headroom_tokens:
+        raise ValueError("KV capacity below the admission headroom")
+
+    cm = cfg.cost_model
+    if cm is None:
+        from repro.launch.cost_model import CostModel
+        cm = CostModel.load(archs=(cfg.arch,))
+    rates = cm.serve_rates(cfg.arch, cfg.gpus_per_instance)
+    fixed_s = rates.decode_fixed_s
+    per_seq_s = rates.decode_per_seq_s
+    prefill_min_per_tok = 1.0 / (rates.prefill_tok_s * 60.0)
+
+    # node-local placement: every instance allocates concrete node GPUs
+    n_nodes = max(cfg.total_gpus // cfg.node_gpus, 1)
+    ledger = NodeLedger(n_nodes, cfg.node_gpus, cfg.total_gpus)
+    placements = [ledger.alloc(cfg.gpus_per_instance)
+                  for _ in range(cfg.n_prefill + cfg.n_decode)]
+    nodes_used = len({node for pl in placements for node in pl if node >= 0})
+
+    res = ServeReplayResult(requests=requests, config=cfg,
+                            nodes_used=nodes_used,
+                            rates_source=rates.source,
+                            rates_prefill_tok_s=rates.prefill_tok_s,
+                            rates_decode_fixed_s=fixed_s,
+                            rates_decode_per_seq_s=per_seq_s)
+
+    page = cfg.page_tokens
+    cap_pages = cfg.kv_pages
+    cap_tokens = cap_pages * page
+    max_batch = cfg.max_batch
+    admit_headroom = cfg.admit_headroom_tokens
+    evict_headroom = cfg.evict_headroom_tokens
+    # a request whose full resident KV cannot fit an otherwise-empty
+    # instance under the conservative bound can never be served
+    max_resident = (cap_pages - 1) * page - admit_headroom
+
+    insts = [_DecodeInstance(i) for i in range(cfg.n_decode)]
+    # prefill fleet: FIFO k-server queue as a (free_at, idx) heap
+    pf = [(0.0, i) for i in range(cfg.n_prefill)]
+    heapq.heapify(pf)
+
+    events: list = []
+    heappush = heapq.heappush
+    heappop = heapq.heappop
+    pending: deque = deque()    # (ready_min, req) awaiting decode admission
+    seq = 0                     # heap tiebreak counter
+
+    order = sorted(range(len(requests)),
+                   key=lambda i: requests[i].arrival_min)
+    arrivals = [requests[i] for i in order]
+    n_arr = len(arrivals)
+
+    # running counters (folded into res after the loop)
+    completed = 0
+    decoded_tokens = 0
+    prefill_tokens = 0
+    recompute_prefill_tokens = 0
+    evictions = 0
+    evicted_tokens = 0
+    stale = 0
+    admit_wait_sum = 0.0
+    admit_wait_n = 0
+    peak_batch = 0
+    events_processed = 0
+
+    def start_prefill(req, now: float, tokens: int, recompute: bool) -> None:
+        nonlocal seq, prefill_tokens, recompute_prefill_tokens
+        free_at, i = heappop(pf)
+        start = free_at if free_at > now else now
+        done = start + tokens * prefill_min_per_tok
+        heappush(pf, (done, i))
+        seq += 1
+        heappush(events, (done, seq, _P_DONE, req, 0))
+        prefill_tokens += tokens
+        if recompute:
+            recompute_prefill_tokens += tokens
+
+    def advance(inst, now: float) -> None:
+        dt = now - inst.t0
+        b = inst.b
+        if dt > 0.0:
+            if b:
+                inst.vtime += dt * inst.rate
+                inst.occ += dt * b
+            inst.t0 = now
+        if b:
+            bound = ((inst.static + b * inst.vtime - inst.admit_vsum)
+                     / page + b)
+            if bound > inst.peak_bound:
+                inst.peak_bound = bound
+
+    def reschedule(inst, now: float) -> None:
+        nonlocal seq, stale
+        ends = inst.ends
+        while ends:
+            fv, _s, req, r = ends[0]
+            if req._res == r and req._inst == inst.idx:
+                break
+            heappop(ends)
+            stale += 1
+        b = inst.b
+        if not b or not ends:
+            return
+        rate = inst.rate
+        t_done = now + (ends[0][0] - inst.vtime) / rate
+        free = ((cap_pages - b) * page
+                - (inst.static + b * inst.vtime - inst.admit_vsum))
+        t_evict = now + (free / (b * rate) if free > 0.0 else 0.0)
+        seq += 1
+        if t_evict < t_done:
+            heappush(events, (t_evict, seq, _D_EVICT, inst.idx, inst.epoch))
+        else:
+            inst.sched_fv = ends[0][0]
+            heappush(events, (t_done, seq, _D_STEP, inst.idx, inst.epoch))
+
+    def admit(now: float) -> None:
+        nonlocal seq, admit_wait_sum, admit_wait_n, peak_batch
+        while pending:
+            ready, req = pending[0]
+            base = req.prompt_tokens + req.decoded
+            best = None
+            best_b = max_batch
+            for inst in insts:
+                b = inst.b
+                if b >= best_b:
+                    continue
+                # projected resident tokens at `now` without mutating
+                toks = (inst.static
+                        + b * (inst.vtime + (now - inst.t0) * inst.rate)
+                        - inst.admit_vsum)
+                if toks + base <= (cap_pages - b - 1) * page \
+                        - admit_headroom:
+                    best = inst
+                    best_b = b
+            if best is None:
+                return      # FIFO head blocked; retry at the next event
+            pending.popleft()
+            admit_wait_sum += now - ready
+            admit_wait_n += 1
+            inst = best
+            advance(inst, now)
+            req._res += 1
+            req._inst = inst.idx
+            req._admit_v = inst.vtime
+            req._base = base
+            inst.static += base
+            inst.admit_vsum += inst.vtime
+            inst.batch[req.req_id] = req
+            inst.b += 1
+            if inst.b > peak_batch:
+                peak_batch = inst.b
+            rem = req.out_tokens - 1 - req.decoded
+            seq += 1
+            heappush(inst.ends, (inst.vtime + rem, seq, req, req._res))
+            inst.rate = 60.0 / (fixed_s + inst.b * per_seq_s)
+            inst.epoch += 1
+            reschedule(inst, now)
+
+    def remove(inst, req) -> None:
+        """Drop a resident from the closed-form KV accounting."""
+        inst.static -= req._base
+        inst.admit_vsum -= req._admit_v
+        inst.b -= 1
+        del inst.batch[req.req_id]
+        req._res += 1           # lazy-delete its completion-heap entry
+
+    def finish(req, now: float) -> None:
+        nonlocal completed, decoded_tokens
+        decoded_tokens += req.out_tokens - 1 - req.decoded
+        req.decoded = req.out_tokens - 1
+        req.done_min = now - req.arrival_min
+        completed += 1
+
+    arr_i = 0
+    while arr_i < n_arr or events:
+        if events and (arr_i >= n_arr
+                       or events[0][0] <= arrivals[arr_i].arrival_min):
+            now, _s, kind, payload, epoch = heappop(events)
+            events_processed += 1
+            if kind == _P_DONE:
+                req = payload
+                if math.isinf(req.ttft_min):
+                    req.ttft_min = now - req.arrival_min
+                    if req.out_tokens <= 1:
+                        finish(req, now)
+                        continue
+                pending.append((now, req))
+                admit(now)
+            elif kind == _D_STEP:
+                inst = insts[payload]
+                if epoch != inst.epoch:
+                    stale += 1
+                    continue
+                advance(inst, now)
+                if inst.vtime < inst.sched_fv:
+                    # float round-trip through (fv - vtime)/rate * rate can
+                    # land a hair short of the targeted finish; clamp so
+                    # the completion below always pops
+                    inst.vtime = inst.sched_fv
+                ends = inst.ends
+                v = inst.vtime + _EPS
+                while ends and ends[0][0] <= v:
+                    _fv, _s2, req, r = heappop(ends)
+                    if req._res != r or req._inst != inst.idx:
+                        stale += 1
+                        continue
+                    remove(inst, req)
+                    finish(req, now)
+                inst.rate = (60.0 / (fixed_s + inst.b * per_seq_s)
+                             if inst.b else 0.0)
+                inst.epoch += 1
+                reschedule(inst, now)
+                admit(now)
+            else:   # _D_EVICT
+                inst = insts[payload]
+                if epoch != inst.epoch:
+                    stale += 1
+                    continue
+                advance(inst, now)
+                while inst.b > 1:
+                    free = ((cap_pages - inst.b) * page
+                            - (inst.static + inst.b * inst.vtime
+                               - inst.admit_vsum))
+                    if free >= evict_headroom:
+                        break
+                    rid = next(reversed(inst.batch))   # LIFO victim
+                    req = inst.batch[rid]
+                    prog = int(inst.vtime - req._admit_v)
+                    if prog < 0:
+                        prog = 0
+                    dec = req.decoded + prog
+                    if dec > req.out_tokens - 1:
+                        dec = req.out_tokens - 1
+                    remove(inst, req)
+                    if dec >= req.out_tokens - 1:
+                        # fully decoded at the eviction instant: there is
+                        # no KV worth rebuilding, the request just ends
+                        finish(req, now)
+                        continue
+                    decoded_tokens += dec - req.decoded
+                    req.decoded = dec
+                    req.evictions += 1
+                    evictions += 1
+                    evicted_tokens += req.prompt_tokens + dec
+                    start_prefill(req, now, req.prompt_tokens + dec, True)
+                inst.rate = (60.0 / (fixed_s + inst.b * per_seq_s)
+                             if inst.b else 0.0)
+                inst.epoch += 1
+                reschedule(inst, now)
+                admit(now)
+        else:
+            req = arrivals[arr_i]
+            arr_i += 1
+            events_processed += 1
+            now = req.arrival_min
+            if req.prompt_tokens + req.out_tokens - 1 > max_resident:
+                res.rejected_ids.append(req.req_id)
+                continue
+            start_prefill(req, now, req.prompt_tokens, False)
+        if now > res.horizon_min:
+            res.horizon_min = now
+
+    res.events_processed = events_processed
+    res.completed = completed
+    res.decoded_tokens = decoded_tokens
+    res.prefill_tokens = prefill_tokens
+    res.recompute_prefill_tokens = recompute_prefill_tokens
+    res.evictions = evictions
+    res.evicted_tokens = evicted_tokens
+    res.stale_events = stale
+    res.admit_wait_sum_min = admit_wait_sum
+    res.admit_wait_n = admit_wait_n
+    res.peak_batch = peak_batch
+    res.occ_time_min = math.fsum(i.occ for i in insts)
+    res.kv_peak_pages = max((i.peak_bound for i in insts), default=0.0)
+    return res

@@ -156,6 +156,87 @@ class JobRecord:
         return math.isfinite(self.queue_min)
 
 
+@dataclasses.dataclass(slots=True)
+class RequestRecord:
+    """One inference request for the serving replay (serve_replay).
+
+    ``out_tokens`` counts every generated token including the first one the
+    prefill pass produces, so a request with ``out_tokens == 1`` finishes at
+    prefill and never occupies a decode slot."""
+    req_id: int
+    arrival_min: float
+    prompt_tokens: int
+    out_tokens: int
+    # filled by the serving replay (repro.cluster.serve_replay):
+    ttft_min: float = math.inf   # arrival -> first token (prefill done)
+    done_min: float = math.inf   # arrival-relative completion; inf = rejected
+    decoded: int = 0             # decode tokens produced so far (<= out-1)
+    evictions: int = 0           # KV evictions this request suffered
+    # -- engine-transient state (repro.cluster.serve_replay) ----------------
+    # Slot-declared for the same reason as JobRecord's transient fields:
+    # the decode loop touches them per membership event at 1M+ request
+    # scale. ``_res`` counts residencies — it versions the request's entry
+    # in an instance's completion heap, so eviction is a lazy deletion.
+    _res: int = dataclasses.field(
+        init=False, repr=False, compare=False, default=0)
+    _inst: int = dataclasses.field(
+        init=False, repr=False, compare=False, default=-1)
+    _admit_v: float = dataclasses.field(
+        init=False, repr=False, compare=False, default=0.0)
+    _base: int = dataclasses.field(
+        init=False, repr=False, compare=False, default=0)
+
+
+def generate_requests(n_requests: int, *, seed: int = 0,
+                      horizon_min: float = 1440.0,
+                      prompt_log_mean: float = math.log(600.0),
+                      prompt_log_sd: float = 1.1,
+                      out_log_mean: float = math.log(150.0),
+                      out_log_sd: float = 0.8,
+                      max_prompt: int = 16384,
+                      max_out: int = 4096,
+                      burst_frac: float = 0.1,
+                      n_bursts: int = 48,
+                      burst_width_min: float = 3.0,
+                      diurnal: bool = True) -> list[RequestRecord]:
+    """Draw the serving-trace request population (diurnal + bursty).
+
+    The arrival process mirrors ``generate_jobs``' submission shape: a
+    uniform draw thinned toward the daytime sine bump (``diurnal``), plus a
+    ``burst_frac`` share of requests re-homed onto ``n_bursts`` random
+    burst centers with one-sided exponential spread — the traffic-spike
+    profile the serving replay's admission/eviction machinery is built
+    for. Arrival and token draws use *separate* seeded streams (both
+    derived from ``seed``), so turning the burst/diurnal knobs reshuffles
+    arrivals while every request's prompt/output lengths stay
+    bit-identical. Returns records sorted by arrival with ``req_id``
+    assigned in arrival order."""
+    n = int(n_requests)
+    arr_rng = np.random.default_rng((seed << 3) ^ 0x5E2E)
+    tok_rng = np.random.default_rng((seed << 3) ^ 0x70C5)
+    arrival = arr_rng.uniform(0.0, horizon_min, n)
+    if diurnal:
+        day_phase = (arrival % 1440.0) / 1440.0
+        keep = arr_rng.random(n) < (0.5 + 0.5 * np.sin(np.pi * day_phase) ** 2)
+        arrival = np.where(keep, arrival, arr_rng.uniform(0, horizon_min, n))
+    if burst_frac > 0.0 and n_bursts > 0:
+        centers = arr_rng.uniform(0.0, horizon_min, n_bursts)
+        which = centers[arr_rng.integers(0, n_bursts, n)]
+        offset = arr_rng.exponential(burst_width_min, n)
+        in_burst = arr_rng.random(n) < burst_frac
+        arrival = np.where(in_burst, np.minimum(which + offset, horizon_min),
+                           arrival)
+    prompt = np.clip(
+        np.exp(tok_rng.normal(prompt_log_mean, prompt_log_sd, n)),
+        16, max_prompt).astype(np.int64)
+    out = np.clip(
+        np.exp(tok_rng.normal(out_log_mean, out_log_sd, n)),
+        1, max_out).astype(np.int64)
+    order = np.argsort(arrival, kind="stable")
+    return [RequestRecord(i, float(arrival[j]), int(prompt[j]), int(out[j]))
+            for i, j in enumerate(order)]
+
+
 def _calibrate_scales(spec: WorkloadSpec, rng: np.random.Generator) -> dict:
     """Per-type duration multiplier so GPU-time shares hit the targets.
 

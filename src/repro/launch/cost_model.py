@@ -51,6 +51,13 @@ _ANALYTIC_FLOPS_PER_BYTE = 12.0   # fusion-level arithmetic intensity
 _ANALYTIC_ZERO_BYTES_PER_PARAM = 12.0   # fwd/bwd gathers + grad reduce
 _ANALYTIC_TP_BYTES_PER_ACT = 8.0        # per token*d_model*layer element
 
+# serving-rate decomposition: share of a decode step's divisible work that
+# is batch-invariant (weight streaming — every step reads the whole sharded
+# parameter set once regardless of how many sequences ride the step) vs
+# per-sequence (KV reads + per-token FLOPs) at the cell's recorded global
+# batch. Order-faithful, not magnitude-faithful, like the analytic cells.
+_SERVE_DECODE_FIXED_FRAC = 0.6
+
 
 @dataclasses.dataclass(frozen=True)
 class CostCell:
@@ -117,6 +124,41 @@ class WidthCurve:
                 f"work={self.work_s:.3e}s, coll={self.coll_s:.3e}s)")
 
 
+@dataclasses.dataclass(frozen=True)
+class ServeRates:
+    """Serving-side pricing derived from one arch's prefill/decode cells.
+
+    The serving replay (``repro.cluster.serve_replay``) consults exactly
+    two quantities:
+
+      * ``prefill_s(tokens)`` — seconds one ``gpus``-wide prefill instance
+        takes to run a prompt (or a KV-recompute pass) of ``tokens``
+        tokens, from the ``prefill_32k`` cell's token throughput scaled
+        linearly from the cell's recorded width to the instance width;
+      * ``step_time_s(batch)`` — seconds per continuous-batching decode
+        step at occupancy ``batch``: an affine ``fixed + batch * per_seq``
+        decomposition of the ``decode_32k`` cell (weight streaming +
+        collectives are batch-invariant, KV reads and token FLOPs scale
+        per sequence), so TPOT improves as batches fill and the engine's
+        admission policy has a real throughput/latency trade to make.
+
+    ``source`` records the provenance of each cell ("calibrated" /
+    "dryrun" / "analytic"), mirroring ``CostCell.source``.
+    """
+    arch: str
+    gpus: int
+    prefill_tok_s: float
+    decode_fixed_s: float
+    decode_per_seq_s: float
+    source: str               # "<prefill cell source>/<decode cell source>"
+
+    def prefill_s(self, tokens: float) -> float:
+        return tokens / self.prefill_tok_s
+
+    def step_time_s(self, batch: int) -> float:
+        return self.decode_fixed_s + batch * self.decode_per_seq_s
+
+
 def _analytic_cell(arch: str, shape_name: str = "train_4k",
                    n_devices: int = NOMINAL_DEVICES) -> CostCell:
     """Deterministic closed-form cell from the arch config alone."""
@@ -133,9 +175,32 @@ def _analytic_cell(arch: str, shape_name: str = "train_4k",
     else:
         tokens_dev = shape.seq_len * shape.global_batch / n_devices
     n_layers = cfg.num_layers + cfg.encoder_layers
-    coll = (_ANALYTIC_ZERO_BYTES_PER_PARAM * total
+    if shape.kind == "train":
+        # training step: ZeRO-style parameter gathers + gradient reduce
+        zero_bytes = _ANALYTIC_ZERO_BYTES_PER_PARAM * total
+    else:
+        # serving step: weights are resident (tensor-parallel sharded), no
+        # per-step parameter movement over the interconnect — only the TP
+        # activation reductions (and MoE a2a) below remain
+        zero_bytes = 0.0
+    coll = (zero_bytes
             + _ANALYTIC_TP_BYTES_PER_ACT * tokens_dev * cfg.d_model
             * n_layers)
+    if shape.kind == "decode":
+        # the flops-intensity heuristic misses what bounds decode: each
+        # step streams the full sharded weight set plus every live
+        # sequence's KV cache through HBM while doing ~2 flops/param of
+        # work. Price those reads explicitly (bf16 weights, K+V bf16 at
+        # the full context) and keep whichever bound is tighter... i.e.
+        # larger, since these are times, not rates.
+        att = getattr(cfg, "attention", None)
+        kv_dim = cfg.d_model
+        if att is not None and att.num_kv_heads and att.head_dim:
+            kv_dim = att.num_kv_heads * att.head_dim
+        weight_b = 2.0 * total / n_devices
+        kv_b = (4.0 * shape.global_batch * shape.seq_len * kv_dim
+                * n_layers / n_devices)
+        byts = max(byts, weight_b + kv_b)
     a2a = 0.0
     if cfg.moe.num_experts:
         n_moe = sum(cfg.moe.is_moe_layer(i) for i in range(cfg.num_layers))
@@ -172,7 +237,8 @@ def _cell_from_record(rec: dict, skipped: Optional[dict] = None
 
 class CostModel:
     """Per-(arch, shape) ``CostCell`` table + per-arch ``WidthCurve``s."""
-    __slots__ = ("cells", "skipped", "art_dir", "_curves", "_job_curves")
+    __slots__ = ("cells", "skipped", "art_dir", "_curves", "_job_curves",
+                 "_serve_rates")
 
     def __init__(self, cells: dict, skipped: dict,
                  art_dir: Optional[str]) -> None:
@@ -181,6 +247,7 @@ class CostModel:
         self.art_dir = art_dir        # None for a purely analytic model
         self._curves: dict = {}       # arch -> Optional[WidthCurve]
         self._job_curves: dict = {}   # (arch, gpus) -> Optional[WidthCurve]
+        self._serve_rates: dict = {}  # (arch, gpus) -> ServeRates
 
     @classmethod
     def load(cls, art_dir: str = DEFAULT_ART_DIR,
@@ -254,6 +321,54 @@ class CostModel:
                                * cell.n_devices, cell.collective_s)
         self._job_curves[key] = curve
         return curve
+
+    def _serve_cell(self, arch: str, shape: str) -> CostCell:
+        """The (arch, shape) serving cell, closed-form when absent.
+
+        ``load()``'s fallback only guarantees train cells; the serving
+        shapes fall back here on demand so a serving replay works for any
+        registry arch on a bare checkout (counted in
+        ``skipped['analytic_fallback_serve']``). Raises ``KeyError`` for
+        an arch the registry does not know."""
+        cell = self.cells.get((arch, shape))
+        if cell is None:
+            cell = _analytic_cell(arch, shape)
+            self.cells[(arch, shape)] = cell
+            self.skipped["analytic_fallback_serve"] = (
+                self.skipped.get("analytic_fallback_serve", 0) + 1)
+        return cell
+
+    def serve_rates(self, arch: str, gpus: int) -> ServeRates:
+        """Per-instance serving rates from the prefill/decode cells.
+
+        Both cells are recorded at the nominal mesh width; a serving
+        instance is ``gpus`` wide, so the divisible terms (compute/memory)
+        scale by ``n_devices / gpus`` while the collective term stays —
+        the same width model as :class:`WidthCurve`. The decode step is
+        then split batch-invariant vs per-sequence with
+        ``_SERVE_DECODE_FIXED_FRAC`` at the cell's recorded batch. Cached
+        per (arch, gpus); the serving replay resolves one per run."""
+        key = (arch, gpus)
+        rates = self._serve_rates.get(key)
+        if rates is not None:
+            return rates
+        pcell = self._serve_cell(arch, "prefill_32k")
+        dcell = self._serve_cell(arch, "decode_32k")
+        pshape = SHAPES["prefill_32k"]
+        p_work = max(pcell.compute_s, pcell.memory_s)
+        p_step = p_work * (pcell.n_devices / gpus) + pcell.collective_s
+        prefill_tok_s = pshape.seq_len * pshape.global_batch / p_step
+        d_work = max(dcell.compute_s, dcell.memory_s) \
+            * (dcell.n_devices / gpus)
+        b0 = SHAPES["decode_32k"].global_batch
+        fixed = d_work * _SERVE_DECODE_FIXED_FRAC + dcell.collective_s
+        per_seq = d_work * (1.0 - _SERVE_DECODE_FIXED_FRAC) / b0
+        rates = ServeRates(arch=arch, gpus=gpus,
+                           prefill_tok_s=prefill_tok_s,
+                           decode_fixed_s=fixed, decode_per_seq_s=per_seq,
+                           source=f"{pcell.source}/{dcell.source}")
+        self._serve_rates[key] = rates
+        return rates
 
     def archs(self) -> list[str]:
         return sorted({a for a, _ in self.cells})

@@ -82,7 +82,8 @@ def _in_engine(path: str) -> bool:
 
 def _in_hot(path: str) -> bool:
     return path.endswith(("repro/cluster/replay.py",
-                          "repro/cluster/scheduler.py"))
+                          "repro/cluster/scheduler.py",
+                          "repro/cluster/serve_replay.py"))
 
 
 def _anywhere(path: str) -> bool:

@@ -28,6 +28,12 @@ def _write_all(dirp, scale=1.0, fingerprint=1234.0):
                             "events_per_sec": 150e3 * scale})
     _write(dirp, "pool", {"events_per_calib": 0.4 * scale})
     _write(dirp, "evalsched", {"events_per_calib": 2.0 * scale})
+    # the serving bench is dryrun-STAMPED but not dryrun-GUARDED: its
+    # gated probe is hermetic, so no fingerprint row is needed here
+    _write(dirp, "serve", {"events_per_calib": 1.5 * scale,
+                           "events_per_calib_serve": 1.5 * scale,
+                           "slo_joint_attainment": 0.8,
+                           "decoded_tok_per_s": 2300.0})
     _write(dirp, "detection", {"n128_probe_savings": 120.0 * scale,
                                "n512_probe_savings": 490.0 * scale})
     _write(dirp, "checkpoint", {"7B-analog_stall_reduction": 10.0 * scale,
@@ -210,4 +216,5 @@ def test_trajectory_skipped_on_partial_run(tmp_path):
     assert write_trajectory(str(fresh), str(tmp_path / "none.json"),
                             label="x") is None
     assert not os.path.exists(os.path.join(str(fresh), "BENCH_replay.json"))
-    assert set(TRAJECTORY_BENCHES) == {"replay", "pool", "evalsched"}
+    assert set(TRAJECTORY_BENCHES) == {"replay", "pool", "evalsched",
+                                       "serve"}

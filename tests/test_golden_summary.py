@@ -95,11 +95,26 @@ def _roofline_summary() -> dict:
     return res.summary()
 
 
+def _serve_summary() -> dict:
+    """Serving replay: 20k diurnal+bursty requests through the default
+    disaggregated fleet, priced with the hermetic *analytic* model (same
+    reasoning as the roofline fixture — reproducible on a bare checkout).
+    Pins the whole scorecard: TTFT/TPOT tails, SLO attainment, KV
+    eviction/recompute accounting, occupancy."""
+    from repro.cluster import (ServeReplayConfig, generate_requests,
+                               replay_requests)
+    from repro.launch.cost_model import CostModel
+    reqs = generate_requests(20_000, seed=0, horizon_min=30.0)
+    cfg = ServeReplayConfig(cost_model=CostModel.analytic(("internlm-7b",)))
+    return replay_requests(reqs, cfg).summary()
+
+
 CASES = {
     "full_feature_50k": _full_feature_summary,
     "easy_pool_20k": _easy_pool_summary,
     "noinject_greedy_50k": _noinject_summary,
     "roofline_20k": _roofline_summary,
+    "serve_20k": _serve_summary,
 }
 
 

@@ -124,3 +124,24 @@ def test_ring_buffer_rolls_past_window(tiny_cfg):
         np.testing.assert_allclose(np.asarray(logits),
                                    np.asarray(full[:, t]),
                                    rtol=1e-4, atol=1e-4)
+
+
+def test_serve_session_stream_is_contiguous():
+    """ServeSession emits a non-overlapping greedy token stream: two
+    chained decode_step calls must equal one generate of the same total."""
+    from repro.launch.serve import ServeSession
+
+    sess = ServeSession("smollm-360m", smoke=True)
+    batch = sess.make_batch(2, 8, seed=3)
+    gen, tp, td = sess.generate(batch, 6)
+    assert gen.shape == (2, 6)
+    assert (tp.phase, tp.batch, tp.tokens) == ("prefill", 2, 16)
+    assert (td.phase, td.batch, td.tokens) == ("decode", 2, 12)
+    assert tp.seconds >= 0.0 and td.tokens_per_s > 0.0
+
+    sess2 = ServeSession("smollm-360m", smoke=True)
+    sess2.prefill(batch)
+    a, _ = sess2.decode_step(2)
+    b, _ = sess2.decode_step(4)
+    chained = np.concatenate([np.asarray(a), np.asarray(b)], axis=1)
+    np.testing.assert_array_equal(chained, np.asarray(gen))

@@ -1,0 +1,149 @@
+"""Serving replay: determinism, admission/KV conservation, eviction
+accounting. The conservation laws here are the engine's ground truth —
+every decode token is produced exactly once, every evicted KV token is
+recomputed through the prefill fleet, and the conservative page bound
+never exceeds capacity."""
+import json
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cluster import (ServeReplayConfig, generate_requests,
+                           replay_requests)
+from repro.launch.cost_model import ServeRates
+
+
+class _StubCostModel:
+    """Duck-typed cost model: fast fixed rates, no artifact loading."""
+
+    def serve_rates(self, arch, gpus):
+        return ServeRates(arch=arch, gpus=gpus, prefill_tok_s=50_000.0,
+                          decode_fixed_s=0.05, decode_per_seq_s=0.002,
+                          source="stub/stub")
+
+
+def _cfg(**kw):
+    kw.setdefault("cost_model", _StubCostModel())
+    return ServeReplayConfig(**kw)
+
+
+def _check_conservation(reqs, res, cfg):
+    """The invariants every serving replay must satisfy, any config."""
+    rejected = set(res.rejected_ids)
+    finished = [r for r in reqs if r.req_id not in rejected]
+    # every admitted request runs to completion
+    assert res.completed == len(finished)
+    for r in finished:
+        assert math.isfinite(r.done_min) and math.isfinite(r.ttft_min)
+        assert 0.0 <= r.ttft_min <= r.done_min + 1e-9
+        assert r.decoded == r.out_tokens - 1
+    for r in reqs:
+        if r.req_id in rejected:
+            assert not math.isfinite(r.done_min)
+    # token conservation: decode side produces each token exactly once...
+    assert res.decoded_tokens == sum(r.out_tokens - 1 for r in finished)
+    # ...and every evicted KV token is recomputed through the prefill fleet
+    assert res.evicted_tokens == res.recompute_prefill_tokens
+    assert res.prefill_tokens == (sum(r.prompt_tokens for r in finished)
+                                  + res.recompute_prefill_tokens)
+    # conservative page bound stays within capacity (up to float round-off
+    # at the eviction-crossing instant)
+    assert res.kv_peak_pages <= cfg.kv_pages + 1e-6
+    assert res.peak_batch <= cfg.max_batch
+    assert sum(r.evictions for r in reqs) == res.evictions
+
+
+def test_replay_is_bit_deterministic():
+    reqs_a = generate_requests(5_000, seed=7, horizon_min=20.0)
+    reqs_b = generate_requests(5_000, seed=7, horizon_min=20.0)
+    sa = replay_requests(reqs_a, _cfg()).summary()
+    sb = replay_requests(reqs_b, _cfg()).summary()
+    assert json.dumps(sa, sort_keys=True) == json.dumps(sb, sort_keys=True)
+
+
+def test_conservation_default_config():
+    reqs = generate_requests(8_000, seed=1, horizon_min=20.0)
+    cfg = _cfg()
+    _check_conservation(reqs, replay_requests(reqs, cfg), cfg)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n=st.integers(50, 600),
+       kv_pages=st.integers(48, 512),
+       max_batch=st.integers(2, 32),
+       n_decode=st.integers(1, 4),
+       n_prefill=st.integers(1, 3),
+       burst_frac=st.floats(0.0, 0.6))
+def test_conservation_property(seed, n, kv_pages, max_batch, n_decode,
+                               n_prefill, burst_frac):
+    """Admission/KV conservation under randomized fleet + trace shapes,
+    including KV-starved configs that force heavy eviction churn."""
+    reqs = generate_requests(n, seed=seed, horizon_min=10.0,
+                             max_prompt=512, max_out=64,
+                             burst_frac=burst_frac, n_bursts=4)
+    cfg = _cfg(n_prefill=n_prefill, n_decode=n_decode,
+               max_batch=max_batch, kv_pages=kv_pages, page_tokens=16,
+               admit_headroom_tokens=32, evict_headroom_tokens=64,
+               total_gpus=256)
+    _check_conservation(reqs, replay_requests(reqs, cfg), cfg)
+
+
+def test_forced_evictions_recompute_through_prefill():
+    """A KV-starved fleet must evict, recompute, and still finish
+    everything it admitted."""
+    reqs = generate_requests(1_500, seed=3, horizon_min=5.0,
+                             max_prompt=400, max_out=64)
+    cfg = _cfg(n_decode=1, n_prefill=1, max_batch=16, kv_pages=96,
+               page_tokens=16, admit_headroom_tokens=32,
+               evict_headroom_tokens=64)
+    res = replay_requests(reqs, cfg)
+    assert res.evictions > 0
+    assert any(r.evictions > 0 and math.isfinite(r.done_min) for r in reqs)
+    _check_conservation(reqs, res, cfg)
+
+
+def test_oversized_requests_rejected():
+    reqs = generate_requests(50, seed=0, horizon_min=1.0)
+    big = reqs[10]
+    big.prompt_tokens = 10**6
+    cfg = _cfg()
+    res = replay_requests(reqs, cfg)
+    assert res.rejected_ids == [big.req_id]
+    _check_conservation(reqs, res, cfg)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        replay_requests([], _cfg(n_decode=0))
+    with pytest.raises(ValueError):
+        replay_requests([], _cfg(total_gpus=64, n_prefill=4, n_decode=16,
+                                 gpus_per_instance=8))
+
+
+def test_generate_requests_stream_separation():
+    """Burst/diurnal knobs reshuffle arrivals but must not perturb the
+    token draws — separate RNG streams, same idiom as generate_jobs."""
+    a = generate_requests(2_000, seed=5, burst_frac=0.0, diurnal=False)
+    b = generate_requests(2_000, seed=5, burst_frac=0.4, diurnal=True)
+    toks_a = sorted((r.prompt_tokens, r.out_tokens) for r in a)
+    toks_b = sorted((r.prompt_tokens, r.out_tokens) for r in b)
+    assert toks_a == toks_b
+    arr_a = [r.arrival_min for r in a]
+    assert arr_a == sorted(arr_a)
+    assert [r.req_id for r in a] == list(range(2_000))
+    assert arr_a != [r.arrival_min for r in b]
+
+
+def test_slo_and_tails_respond_to_load():
+    """Doubling the arrival rate into the same fleet cannot improve the
+    TTFT tail or the joint SLO."""
+    light = generate_requests(2_000, seed=11, horizon_min=40.0)
+    heavy = generate_requests(20_000, seed=11, horizon_min=40.0)
+    s_light = replay_requests(light, _cfg(n_decode=2, n_prefill=1)).summary()
+    s_heavy = replay_requests(heavy, _cfg(n_decode=2, n_prefill=1)).summary()
+    assert s_heavy["ttft"]["p99_s"] >= s_light["ttft"]["p99_s"]
+    assert (s_heavy["slo"]["joint_attainment"]
+            <= s_light["slo"]["joint_attainment"] + 1e-9)

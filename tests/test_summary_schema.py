@@ -1,0 +1,91 @@
+"""The summary-schema contract shared by ``ReplayResult.summary()`` and
+``ServeReplayResult.summary()`` (README "Result schemas"):
+
+  1. stable top-level keys — additive evolution only, so downstream
+     notebooks/benches can index without defensive ``.get`` chains;
+  2. plain-scalar leaves (int/float/str/bool/None) reachable through
+     dicts and lists only — the tree must survive ``json.dumps`` without
+     a custom encoder;
+  3. side-effect-free repeated calls — mutating a returned tree must not
+     leak into later calls, and every call returns an equal tree.
+"""
+import json
+
+from repro.cluster import (KALOS, ReplayConfig, ServeReplayConfig,
+                           generate_jobs, generate_requests, replay_requests,
+                           replay_trace)
+from repro.launch.cost_model import CostModel
+
+REPLAY_TOP_KEYS = {
+    "n_jobs", "events_processed", "queue_delay_quantiles", "restart_counts",
+    "total_restarts", "total_lost_gpu_hours", "lost_gpu_hours_by_class",
+    "lost_gpu_hours_by_jtype", "killed_jobs", "rejected_jobs",
+    "cordon_events", "detection_probes", "recovery", "pool", "placement",
+    "head_delay",
+}
+
+SERVE_TOP_KEYS = {
+    "n_requests", "completed", "rejected", "events_processed",
+    "stale_events", "horizon_min", "ttft", "tpot", "slo", "throughput",
+    "batch", "kv", "fleet", "cost_model",
+}
+
+_SCALARS = (int, float, str, bool, type(None))
+
+
+def _walk(path, node, problems):
+    if isinstance(node, dict):
+        for k, v in node.items():
+            if not isinstance(k, (str, int)):
+                problems.append(f"{path}: non-str/int key {k!r}")
+            _walk(f"{path}.{k}", v, problems)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _walk(f"{path}[{i}]", v, problems)
+    elif not isinstance(node, _SCALARS):
+        problems.append(f"{path}: non-scalar leaf {type(node).__name__}")
+
+
+def _replay_result():
+    jobs = generate_jobs(KALOS, seed=2, n_jobs=3_000, best_effort_frac=0.2)
+    return replay_trace(jobs, KALOS.n_gpus, reserved_frac=0.97,
+                        config=ReplayConfig(elastic=True, placement=True))
+
+
+def _serve_result():
+    reqs = generate_requests(3_000, seed=2, horizon_min=10.0)
+    cfg = ServeReplayConfig(cost_model=CostModel.analytic(("internlm-7b",)))
+    return replay_requests(reqs, cfg)
+
+
+def _check_contract(result, expected_top):
+    s = result.summary()
+    assert set(s) >= expected_top, (
+        f"missing top-level keys: {expected_top - set(s)}")
+    problems: list = []
+    _walk("summary", s, problems)
+    assert not problems, "\n".join(problems)
+    json.dumps(s)   # no custom encoder needed
+    # repeated calls are side-effect-free: deep-mutate the first tree and
+    # demand the second is pristine and equal to the original
+    pristine = json.loads(json.dumps(s))
+    _clobber(s)
+    s2 = result.summary()
+    assert json.loads(json.dumps(s2)) == pristine
+
+
+def _clobber(node):
+    if isinstance(node, dict):
+        for k in list(node):
+            _clobber(node[k])
+            node[k] = "clobbered"
+    elif isinstance(node, list):
+        node.clear()
+
+
+def test_replay_summary_schema():
+    _check_contract(_replay_result(), REPLAY_TOP_KEYS)
+
+
+def test_serve_summary_schema():
+    _check_contract(_serve_result(), SERVE_TOP_KEYS)
