@@ -1,0 +1,66 @@
+"""Static kernel cost table (``repro.quality.pallas_cost``) as a gated
+bench: per-(kernel, shape) predicted FLOPs, HBM bytes, and arithmetic
+intensity, recorded in the trajectory so a kernel edit that degrades
+predicted intensity (or blows the VMEM budget, or breaks the cost-model
+cross-check) fails CI the way a replay-throughput regression already does.
+
+Fully deterministic — no timing, no TPU: the numbers are derived by
+abstract interpretation, so any movement is a real change to a kernel's
+blocking/indexing, never runner noise. This is the ground truth the
+ROADMAP's kernel perf push (block-size autotuning DSE) searches over.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, emit
+from repro.quality.pallas_cost import (analyze_shipped,
+                                       crosscheck_cost_model)
+
+
+def _short(kernel_path: str, shape: str) -> str:
+    # "src/repro/kernels/flash_attention/kernel.py" -> "flash_attention"
+    return f"{kernel_path.split('/')[-2]}[{shape}]"
+
+
+def run(fast: bool = False) -> list[Row]:
+    costs, findings = analyze_shipped()
+    check = crosscheck_cost_model(costs)
+    rows = [
+        Row("kernel_cost", "n_rows", float(len(costs)),
+            "(kernel, shape) static cost rows", "count", len(costs) > 0),
+        Row("kernel_cost", "n_findings", float(len(findings)),
+            "RPL2xx resource findings", "count", not findings),
+        Row("kernel_cost", "cost_model_agreement",
+            1.0 if check["ok"] else 0.0,
+            "analytic intensity inside static kernel envelope", "bool",
+            check["ok"]),
+    ]
+    if costs:
+        # the gated headline: the envelope edges. min_intensity guards the
+        # memory-bound floor (rmsnorm), worst_intensity the compute side —
+        # a kernel edit that collapses either shifts the whole cost model.
+        intensities = [c["arithmetic_intensity"] for c in costs]
+        rows += [
+            Row("kernel_cost", "min_intensity", min(intensities),
+                "envelope floor (memory-bound kernels)", "flops/B"),
+            Row("kernel_cost", "max_intensity", max(intensities),
+                "envelope ceiling (matmul-heavy kernels)", "flops/B"),
+        ]
+        for c in costs:
+            name = _short(c["kernel"], c["shape"])
+            rows += [
+                Row("kernel_cost", f"{name}_intensity",
+                    c["arithmetic_intensity"], "", "flops/B"),
+                Row("kernel_cost", f"{name}_roofline_frac",
+                    c["roofline_frac"], "", ""),
+                Row("kernel_cost", f"{name}_vmem_mib",
+                    c["vmem_bytes"] / (1024 * 1024), "", "MiB"),
+            ]
+    return rows
+
+
+def main(fast: bool = False) -> None:
+    emit(run(fast), "kernel_cost")
+
+
+if __name__ == "__main__":
+    main()

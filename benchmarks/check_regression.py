@@ -20,7 +20,12 @@ regression in the gated benches:
   * ``detection``  — two-round sweep probe savings vs naive pairwise
     (deterministic, seeded: any drop is a real algorithmic regression);
   * ``checkpoint`` — sync/async stall-reduction ratios (a ratio of two
-    same-machine timings, so machine speed cancels).
+    same-machine timings, so machine speed cancels);
+  * ``kernel_cost`` — the static per-kernel cost table
+    (``repro.quality.pallas_cost``): deterministic predicted arithmetic
+    intensity per (kernel, shape), the cost-model agreement bool, and the
+    row count — a kernel edit that degrades predicted intensity fails
+    here even though nothing was timed.
 
 Usage (what ``.github/workflows/ci.yml`` runs after the fast bench step):
 
@@ -90,6 +95,16 @@ GATES: dict[str, list[tuple[str, str, Optional[float]]]] = {
     "moe_comm": [("deepseek_over_dense", "higher", 0.5),
                  ("mixtral_over_dense", "higher", 0.5),
                  ("deepseek_a2a_gib_per_step", "higher", 0.5)],
+    # static kernel cost table (repro.quality.pallas_cost): fully
+    # deterministic (no timing), so any movement is a real kernel
+    # blocking/indexing change — a >25% intensity-envelope shrink must be
+    # deliberate (recommit the baseline with the PR). The agreement bool
+    # collapsing 1 -> 0 trips any band; hard failures (RPL2xx findings)
+    # are additionally refused outright by the pallas_cost stamp check.
+    "kernel_cost": [("cost_model_agreement", "higher", None),
+                    ("n_rows", "higher", None),
+                    ("min_intensity", "higher", None),
+                    ("max_intensity", "higher", None)],
 }
 
 # benches whose rows derive from artifacts/dryrun/** cells: their metrics
@@ -133,6 +148,12 @@ def check_replint_stamps(fresh_dir: str) -> list[str]:
                 f"{name}: produced by a tree with non-baseline replint "
                 f"findings ({int(rows.get('replint_findings', -1))}); fix "
                 "the lint findings and re-run the benches")
+        if rows.get("pallas_cost_clean") == 0.0:
+            failures.append(
+                f"{name}: produced by a tree whose kernels carry RPL2xx "
+                "resource findings or fail the cost-model cross-check "
+                f"({int(rows.get('pallas_cost_findings', -1))} findings); "
+                "fix the kernels and re-run the benches")
     if unstamped:
         print(f"  replint stamp: {unstamped} unstamped artifacts "
               "(pre-replint or direct module runs), tolerated")

@@ -136,6 +136,18 @@ def set_replint_stamp(verdict: dict) -> None:
     _REPLINT_STAMP = dict(verdict)
 
 
+# pallas_cost verdict rows (repro.quality.pallas_cost.verdict) stamped
+# alongside the replint stamp: bench numbers recorded while a kernel
+# carried RPL2xx resource findings (or while the static cost table
+# disagreed with the analytic cost model) must never become baselines.
+_PALLAS_COST_STAMP: "Optional[dict]" = None
+
+
+def set_pallas_cost_stamp(verdict: dict) -> None:
+    global _PALLAS_COST_STAMP
+    _PALLAS_COST_STAMP = dict(verdict)
+
+
 # dryrun-artifact provenance (launch.cost_model.dryrun_provenance) stamped
 # into the benches that consume artifacts/dryrun/** — check_regression
 # compares the fingerprint before comparing any of their metrics, so a
@@ -175,6 +187,16 @@ def emit(rows: list[Row], name: str) -> None:
                 target="no non-baseline lint findings", unit="bool"),
             Row(name, "replint_findings",
                 float(_REPLINT_STAMP.get("findings", 0)), unit="count"),
+        ]
+    if _PALLAS_COST_STAMP is not None:
+        rows = rows + [
+            Row(name, "pallas_cost_clean",
+                1.0 if _PALLAS_COST_STAMP.get("clean") else 0.0,
+                target="no RPL2xx findings + cost-model check holds",
+                unit="bool"),
+            Row(name, "pallas_cost_findings",
+                float(_PALLAS_COST_STAMP.get("n_findings", 0)),
+                unit="count"),
         ]
     if _DRYRUN_STAMP is not None and name in DRYRUN_STAMPED_BENCHES:
         # the 32-bit crc fingerprint is exactly representable as a float,

@@ -26,11 +26,11 @@ import time
 import traceback
 
 from benchmarks import (bench_checkpoint, bench_detection, bench_diagnosis,
-                        bench_evalsched, bench_moe_comm, bench_pool,
-                        bench_recovery, bench_replay, bench_roofline,
-                        bench_serve, bench_trace)
+                        bench_evalsched, bench_kernel_cost, bench_moe_comm,
+                        bench_pool, bench_recovery, bench_replay,
+                        bench_roofline, bench_serve, bench_trace)
 from benchmarks.common import (ARTIFACTS, emit, set_dryrun_stamp,
-                               set_replint_stamp)
+                               set_pallas_cost_stamp, set_replint_stamp)
 
 # benches whose calibrated throughput forms the consolidated trajectory
 TRAJECTORY_BENCHES = ("replay", "pool", "evalsched", "serve")
@@ -49,6 +49,10 @@ TRAJECTORY_EXTRAS = {
     "moe_mixtral_over_dense": ("moe_comm", "mixtral_over_dense"),
     "serve_joint_attainment": ("serve", "slo_joint_attainment"),
     "serve_decoded_tok_per_s": ("serve", "decoded_tok_per_s"),
+    # static kernel cost envelope: deterministic, so any movement in the
+    # history is a real kernel blocking/indexing change
+    "kernel_min_intensity": ("kernel_cost", "min_intensity"),
+    "kernel_max_intensity": ("kernel_cost", "max_intensity"),
 }
 TRAJECTORY_BASELINE = os.path.join("artifacts", "bench", "BENCH_replay.json")
 
@@ -76,6 +80,26 @@ def _stamp_replint() -> dict:
     print(f"# replint: tree is {state} "
           f"({_replint_verdict.get('findings', '?')} findings)")
     return _replint_verdict
+
+
+def _stamp_pallas_cost() -> dict:
+    """Static kernel resource verdict (RPL2xx + cost-model cross-check)
+    for this run's tree, stamped into every artifact row set;
+    ``check_regression`` refuses artifacts stamped pallas_cost-dirty the
+    same way it refuses replint-dirty ones."""
+    try:
+        from repro.quality.pallas_cost import verdict
+        v = verdict()
+    except Exception as exc:  # noqa: BLE001 - a broken analyzer must not
+        #                       kill the bench run; the stamp records it
+        v = {"clean": False, "n_findings": -1, "cost_model_ok": False,
+             "error": str(exc)}
+    set_pallas_cost_stamp(v)
+    state = "clean" if v.get("clean") else "DIRTY"
+    print(f"# pallas_cost: kernels are {state} "
+          f"({v.get('n_findings', '?')} findings, cost-model check "
+          f"{'ok' if v.get('cost_model_ok') else 'FAILED'})")
+    return v
 
 
 def _stamp_dryrun() -> dict:
@@ -186,6 +210,7 @@ BENCHES = {
     "moe_comm": bench_moe_comm,        # Appendix A.6
     "roofline": bench_roofline,        # §Roofline (dry-run artifacts)
     "serve": bench_serve,              # §6.2 serving-cluster replay
+    "kernel_cost": bench_kernel_cost,  # static RPL2xx kernel cost table
 }
 # heavyweight (forces 512 XLA host devices; run explicitly):
 #   python -m benchmarks.bench_parallelism   # Fig. 10/11 V1-vs-V2
@@ -200,6 +225,7 @@ def main() -> None:
                          "hot-path table -> profile_replay.json)")
     args = ap.parse_args()
     _stamp_replint()
+    _stamp_pallas_cost()
     _stamp_dryrun()
     failures = []
     succeeded = []

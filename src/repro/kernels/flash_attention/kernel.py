@@ -26,6 +26,21 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -2.0 ** 30
 
+#: Declared streaming allowance for the static analyzer (RPL202,
+#: ``repro.quality.pallas_cost``): operand positions (in ``pallas_call``
+#: argument order) that are *deliberately* re-fetched across grid axes
+#: their index_map ignores, with the reason. Everything not listed here
+#: must have revisit factor 1 — a new revisit pattern is a perf bug until
+#: declared.
+STREAMING_OPERANDS = {
+    0: "q_positions re-read per q-head (tiny (1, block_q) i32 block)",
+    1: "kv_positions re-streamed per (head, q-block) with the KV walk",
+    3: "K streamed over every (q-head, q-block): the FlashAttention "
+       "trade — O(S^2) HBM reads bought back by never materializing S^2 "
+       "scores",
+    4: "V streamed with K (same inner KV walk)",
+}
+
 
 def _kernel(q_pos_ref, kv_pos_ref, q_ref, k_ref, v_ref, o_ref,
             m_scr, l_scr, acc_scr, *, scale: float, causal: bool,

@@ -13,6 +13,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+#: RPL202 streaming allowance (see flash_attention.kernel): empty — every
+#: operand here is fetched exactly once (scale's index_map is constant, so
+#: its block stays resident across the whole row walk).
+STREAMING_OPERANDS: dict[int, str] = {}
+
 
 def _kernel(x_ref, scale_ref, o_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)                   # (rows, d)

@@ -22,6 +22,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+#: RPL202 streaming allowance (see flash_attention.kernel): operand
+#: positions deliberately re-fetched across grid axes their index_map
+#: ignores.
+STREAMING_OPERANDS = {
+    2: "A is a per-head scalar re-read per batch (4-byte block)",
+    3: "B blocks re-streamed for each of the H//G heads sharing a group",
+    4: "C streamed with B (same head-group sharing)",
+}
+
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, s_scr, *,
             num_chunks: int):

@@ -47,7 +47,10 @@ NOMINAL_DEVICES = 256
 
 # analytic-fallback constants (documented, deterministic; see module doc)
 _ANALYTIC_HLO_EFFICIENCY = 0.85   # model FLOPs / HLO FLOPs (remat waste)
-_ANALYTIC_FLOPS_PER_BYTE = 12.0   # fusion-level arithmetic intensity
+#: fusion-level arithmetic intensity assumed by the analytic cells; public
+#: because repro.quality.pallas_cost cross-checks it against the envelope
+#: of statically-derived per-kernel intensities
+ANALYTIC_FLOPS_PER_BYTE = 12.0
 _ANALYTIC_ZERO_BYTES_PER_PARAM = 12.0   # fwd/bwd gathers + grad reduce
 _ANALYTIC_TP_BYTES_PER_ACT = 8.0        # per token*d_model*layer element
 
@@ -59,7 +62,7 @@ _ANALYTIC_TP_BYTES_PER_ACT = 8.0        # per token*d_model*layer element
 _SERVE_DECODE_FIXED_FRAC = 0.6
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class CostCell:
     """One (arch, shape) step-time observation at the nominal mesh width."""
     arch: str
@@ -124,7 +127,7 @@ class WidthCurve:
                 f"work={self.work_s:.3e}s, coll={self.coll_s:.3e}s)")
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class ServeRates:
     """Serving-side pricing derived from one arch's prefill/decode cells.
 
@@ -169,7 +172,7 @@ def _analytic_cell(arch: str, shape_name: str = "train_4k",
     mf = model_flops_per_device(cfg, shape.kind, shape.seq_len,
                                 shape.global_batch, n_devices)
     hlo_flops = mf / _ANALYTIC_HLO_EFFICIENCY
-    byts = hlo_flops / _ANALYTIC_FLOPS_PER_BYTE
+    byts = hlo_flops / ANALYTIC_FLOPS_PER_BYTE
     if shape.kind == "decode":
         tokens_dev = shape.global_batch / n_devices
     else:

@@ -25,6 +25,30 @@ _DTYPE_BYTES = {
     "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
 }
 
+# numpy dtype name -> the HLO short name used in _DTYPE_BYTES
+_NP_TO_HLO = {
+    "float64": "f64", "float32": "f32", "float16": "f16",
+    "bfloat16": "bf16", "float8_e4m3fn": "f8e4m3fn",
+    "float8_e5m2": "f8e5m2", "int64": "s64", "uint64": "u64",
+    "int32": "s32", "uint32": "u32", "int16": "s16", "uint16": "u16",
+    "int8": "s8", "uint8": "u8", "bool": "pred", "complex64": "c64",
+    "complex128": "c128",
+}
+
+
+def dtype_bytes(dtype) -> int:
+    """Bytes per element for a numpy/jax dtype, priced off the same
+    ``_DTYPE_BYTES`` table the HLO shape parser uses — so the static
+    kernel analyzer (``repro.quality.pallas_cost``) and the HLO
+    collective parser count bytes with one set of constants. Unknown
+    dtypes fall back to numpy's ``itemsize``."""
+    import numpy as np
+    dt = np.dtype(dtype)
+    short = _NP_TO_HLO.get(dt.name)
+    if short is None:
+        return int(dt.itemsize)
+    return _DTYPE_BYTES[short]
+
 _COLL = re.compile(
     r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<result>.*?)\s*"
     r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
@@ -49,7 +73,7 @@ def _shape_bytes(text: str) -> int:
     return best
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class CollectiveStats:
     counts: dict
     bytes_by_op: dict

@@ -37,6 +37,7 @@ import contextlib
 import dataclasses
 import functools
 import inspect
+import itertools
 import json
 import os
 import sys
@@ -51,12 +52,13 @@ from repro.quality.rules import Finding
 MXU_LANE = 128
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class CapturedCall:
     """One intercepted ``pl.pallas_call``: the static contract plus the
-    operand avals it was applied to."""
-    __slots__ = ("kernel", "grid", "in_specs", "out_specs", "out_shape",
-                 "scratch_shapes", "operands")
+    operand avals it was applied to. ``extra_kwargs`` records every
+    keyword the stub did not model (``interpret``, ``compiler_params``,
+    future Pallas API surface) so the report can show what the checker
+    ignored instead of silently dropping it."""
     kernel: Callable
     grid: tuple
     in_specs: list
@@ -64,6 +66,8 @@ class CapturedCall:
     out_shape: list
     scratch_shapes: list
     operands: list          # jax.ShapeDtypeStruct per input
+    #: sorted unmodeled keyword names
+    extra_kwargs: list = dataclasses.field(default_factory=list)
 
 
 class _CapturingPallasCall:
@@ -77,7 +81,9 @@ class _CapturingPallasCall:
     def __call__(self, kernel, *, grid=None, in_specs=None, out_specs=None,
                  out_shape=None, scratch_shapes=(), grid_spec=None,
                  **_kwargs):
-        if grid_spec is not None:     # pragma: no cover - none shipped yet
+        if grid_spec is not None:
+            # a pl.GridSpec bundles grid/in_specs/out_specs; unpack it so
+            # the same per-spec checks run on either calling convention
             grid = getattr(grid_spec, "grid", grid)
             in_specs = getattr(grid_spec, "in_specs", in_specs)
             out_specs = getattr(grid_spec, "out_specs", out_specs)
@@ -95,7 +101,8 @@ class _CapturingPallasCall:
                 out_shape=out_list,
                 scratch_shapes=list(scratch_shapes),
                 operands=[jax.ShapeDtypeStruct(o.shape, o.dtype)
-                          for o in operands]))
+                          for o in operands],
+                extra_kwargs=sorted(_kwargs)))
             outs = [jnp.zeros(s.shape, s.dtype) for s in out_list]
             return outs if multi_out else outs[0]
 
@@ -150,6 +157,27 @@ def _index_map_arity(spec) -> Optional[int]:
         return None
 
 
+def grid_corners(grid: tuple) -> list[tuple]:
+    """The deduplicated corners of the grid index space: every combination
+    of first/last step per axis. An ``index_map`` that misbehaves only
+    off-origin (conditional shapes, wrong arithmetic on the last block)
+    shows up here long before a full-grid walk — shared by this checker
+    and ``pallas_cost``'s exhaustive RPL203 pass."""
+    if not grid:
+        return [()]
+    axes = [(0,) if n <= 1 else (0, n - 1) for n in grid]
+    return sorted(set(itertools.product(*axes)))
+
+
+def eval_index_map(spec, step: tuple) -> tuple:
+    """Evaluate ``spec.index_map`` at one grid step, normalized to a tuple
+    of ints. Exceptions propagate — callers decide how to report them."""
+    idx = spec.index_map(*step)
+    if not isinstance(idx, tuple):
+        idx = (idx,)
+    return tuple(int(i) for i in idx)
+
+
 def _check_spec(findings: list, where: str, path: str, spec,
                 aval, grid: tuple) -> None:
     """All BlockSpec-vs-operand checks for one (spec, aval) pair."""
@@ -176,12 +204,21 @@ def _check_spec(findings: list, where: str, path: str, spec,
 
     imap = getattr(spec, "index_map", None)
     if imap is not None and arity == len(grid):
-        idx = imap(*([0] * len(grid)))
-        if not isinstance(idx, tuple):
-            idx = (idx,)
-        if len(idx) != len(block):
-            emit("RPL101", f"index_map returns {len(idx)} block indices "
-                 f"but the block shape {block} has rank {len(block)}")
+        # evaluate at every grid corner, not just the origin: a map that
+        # special-cases the first block (or divides wrongly near the last)
+        # returns the right rank at (0,...,0) and the wrong one elsewhere
+        for corner in grid_corners(grid):
+            try:
+                idx = eval_index_map(spec, corner)
+            except Exception as exc:  # noqa: BLE001 - any raise is the bug
+                emit("RPL101", f"index_map raised at grid corner "
+                     f"{corner}: {exc!r}")
+                break
+            if len(idx) != len(block):
+                emit("RPL101", f"index_map at grid corner {corner} returns "
+                     f"{len(idx)} block indices but the block shape "
+                     f"{block} has rank {len(block)}")
+                break
 
     for d, (b, full) in enumerate(zip(block, aval.shape)):
         if b is None:               # None = whole axis, always legal
@@ -290,11 +327,23 @@ SHIPPED_KERNELS: dict[str, Callable[[], None]] = {
 }
 
 
-def check_shipped() -> list[Finding]:
+def shipped_report() -> tuple[list[Finding], list[str]]:
+    """Check every shipped kernel; also collect the unmodeled
+    ``pallas_call`` keyword names the stub saw, so the report surfaces
+    API surface the checker ignores instead of silently dropping it."""
     findings: list[Finding] = []
+    kwargs_seen: set[str] = set()
     for path, trace in SHIPPED_KERNELS.items():
-        findings.extend(check_traced(trace, path))
-    return findings
+        with capture_pallas_calls() as stub:
+            trace()
+        for call in stub.calls:
+            findings.extend(check_call(call, path))
+            kwargs_seen.update(call.extra_kwargs)
+    return findings, sorted(kwargs_seen)
+
+
+def check_shipped() -> list[Finding]:
+    return shipped_report()[0]
 
 
 def main(argv: Optional[list] = None) -> int:
@@ -305,7 +354,7 @@ def main(argv: Optional[list] = None) -> int:
                     help="write the JSON report here (e.g. "
                          "artifacts/lint/pallas_check.json)")
     args = ap.parse_args(argv)
-    findings = check_shipped()
+    findings, kwargs_seen = shipped_report()
     for f in findings:
         print(f"{f.path}: {f.code} {f.message}")
     if args.report:
@@ -314,6 +363,7 @@ def main(argv: Optional[list] = None) -> int:
             "kernels": list(SHIPPED_KERNELS),
             "n_findings": len(findings),
             "clean": not findings,
+            "extra_kwargs_seen": kwargs_seen,
             "findings": [{"code": f.code, "path": f.path,
                           "message": f.message} for f in findings],
         }

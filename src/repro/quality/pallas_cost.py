@@ -1,0 +1,632 @@
+"""Static Pallas kernel resource & roofline analyzer (``RPL2xx`` family).
+
+Where ``pallas_check`` verifies the *contract* of every ``pallas_call``
+(BlockSpec arity/rank/divisibility — RPL1xx), this module derives the
+*resources* the call will consume, on hosts with no TPU:
+
+* the kernel body is abstract-interpreted — each ref is bound to a
+  block-shaped aval (``_RefBox``), ``pl.program_id`` / ``pl.when`` are
+  replaced by static stand-ins, and the body is lowered through
+  ``jax.make_jaxpr``; walking the jaxpr eqns with one set of FLOP/byte
+  constants (shared with ``launch.hlo_analysis``) yields per-grid-step
+  FLOPs, transcendental counts, and the VMEM footprint (operand/output
+  blocks double-buffered by the pipeline, scratch single);
+* every ``index_map`` is evaluated over the *full* grid (not just the
+  corners, as ``pallas_check`` does) to compute exact HBM bytes moved per
+  operand, block revisit factors, and output-tiling coverage.
+
+From these, gated rules:
+
+``RPL201``  VMEM budget overflow: 2x(input+output blocks) + scratch
+            exceeds the per-core budget (16 MiB)
+``RPL202``  pathological revisit: an *input* operand is re-fetched across
+            a grid axis its index_map ignores (revisit factor > 1) and is
+            not listed in the kernel module's declared
+            ``STREAMING_OPERANDS`` allowance
+``RPL203``  output tiling leaves gaps (tiles never written, today's
+            silent-garbage class) or overlaps (a block written in more
+            than one non-consecutive run — a double-write)
+``RPL204``  a kernel ref the jaxpr never reads nor writes (dead wiring)
+
+and a per-(kernel, shape) static cost table — FLOPs, HBM bytes,
+arithmetic intensity, roofline-% via ``launch.roofline`` peaks — written
+to ``artifacts/lint/pallas_cost.json``. The table is the ground truth the
+ROADMAP's kernel perf push benchmarks against
+(``benchmarks/bench_kernel_cost.py`` records it in the trajectory;
+``check_regression`` fails CI when a kernel edit degrades predicted
+intensity), and ``CostModel``'s analytic kernel constant is cross-checked
+against the static intensity envelope here.
+
+Run over the shipped kernels (what CI does)::
+
+    PYTHONPATH=src python -m repro.quality.pallas_cost \\
+        --report artifacts/lint/pallas_cost.json
+
+Exit 0 when every kernel passes and the cost-model cross-check holds.
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import dataclasses
+import itertools
+import json
+import math
+import os
+import sys
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.launch.hlo_analysis import dtype_bytes
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+from repro.quality.pallas_check import (CapturedCall, capture_pallas_calls,
+                                        check_call, eval_index_map)
+from repro.quality.rules import Finding
+
+#: per-core VMEM budget (bytes) — the Pallas TPU guide's ~16 MiB/core
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+#: slack factor for the CostModel cross-check: the analytic fusion-level
+#: intensity must lie inside [min_kernel / SLACK, max_kernel * SLACK] of
+#: the statically-derived per-kernel intensities
+COST_MODEL_SLACK = 1.25
+
+
+# ---------------------------------------------------------------------------
+# kernel-body abstract interpretation
+# ---------------------------------------------------------------------------
+
+class _RefBox:
+    """Mutable stand-in for a Pallas Ref during abstract interpretation.
+
+    Holds a block-shaped traced array; ``[]`` reads and ``[]=`` writes are
+    counted (RPL204) while staying traceable — writes go through
+    ``.at[idx].set`` so the body lowers to a normal jaxpr. ``__jax_array__``
+    lets ``jnp.zeros_like(ref)``-style shape probes work without counting
+    as a data read.
+    """
+    __slots__ = ("val", "name", "reads", "writes")
+
+    def __init__(self, val, name: str) -> None:
+        self.val = val
+        self.name = name
+        self.reads = 0
+        self.writes = 0
+
+    @property
+    def shape(self):
+        return self.val.shape
+
+    @property
+    def dtype(self):
+        return self.val.dtype
+
+    def __getitem__(self, idx):
+        self.reads += 1
+        return self.val[idx]
+
+    def __setitem__(self, idx, value):
+        self.writes += 1
+        self.val = self.val.at[idx].set(value)
+
+    def __jax_array__(self):
+        return self.val
+
+
+@contextlib.contextmanager
+def _static_pallas_env():
+    """Patch the Pallas primitives kernels use for control flow so a body
+    traces outside ``pallas_call``: ``program_id`` becomes step 0 and
+    ``pl.when`` runs its body unconditionally. Consequence (documented
+    convention): conditionally-executed work is charged on *every* grid
+    step, making the static FLOP count an upper bound — for the shipped
+    kernels the ``@pl.when`` bodies are O(block) init/writeback next to
+    O(block^2) matmuls, <3% of a step."""
+    orig_pid, orig_when = pl.program_id, pl.when
+
+    def _when(_cond):
+        def deco(fn):
+            fn()
+            return fn
+        return deco
+
+    pl.program_id = lambda axis: jnp.int32(0)
+    pl.when = _when
+    try:
+        yield
+    finally:
+        pl.program_id, pl.when = orig_pid, orig_when
+
+
+def _ref_shape(spec, aval) -> tuple:
+    """Shape of the ref the kernel body sees for one (spec, operand):
+    ``None`` block dims are squeezed out of the view; a spec without a
+    block_shape (or no spec) passes the whole operand through."""
+    block = getattr(spec, "block_shape", None)
+    if block is None:
+        return tuple(aval.shape)
+    return tuple(int(b) for b in block if b is not None)
+
+
+def _block_dims(spec, aval) -> tuple:
+    """Extent of one resident block in operand coordinates (``None`` block
+    dims span the whole axis)."""
+    block = getattr(spec, "block_shape", None)
+    if block is None:
+        return tuple(aval.shape)
+    return tuple(int(aval.shape[d]) if b is None else int(b)
+                 for d, b in enumerate(block))
+
+
+def trace_body(call: CapturedCall) -> tuple:
+    """Lower one captured call's kernel body to a jaxpr with every ref
+    bound to its block-shaped aval. Returns ``(jaxpr, refs)`` where
+    ``refs`` is the list of ``_RefBox`` (inputs, then outputs, then
+    scratch) carrying read/write counts from the trace."""
+    ref_specs: list[tuple[str, tuple, Any]] = []
+    for i, (spec, aval) in enumerate(zip(call.in_specs, call.operands)):
+        ref_specs.append((f"in[{i}]", _ref_shape(spec, aval), aval.dtype))
+    for i, (spec, aval) in enumerate(zip(call.out_specs, call.out_shape)):
+        ref_specs.append((f"out[{i}]", _ref_shape(spec, aval), aval.dtype))
+    for i, scr in enumerate(call.scratch_shapes):
+        ref_specs.append((f"scratch[{i}]", tuple(scr.shape), scr.dtype))
+
+    refs: list[_RefBox] = []
+
+    def run(*arrays):
+        boxes = [_RefBox(a, name)
+                 for a, (name, _, _) in zip(arrays, ref_specs)]
+        refs.clear()
+        refs.extend(boxes)
+        call.kernel(*boxes)
+        return tuple(b.val for b in boxes)
+
+    avals = [jax.ShapeDtypeStruct(shape, dtype)
+             for _, shape, dtype in ref_specs]
+    with _static_pallas_env():
+        jaxpr = jax.make_jaxpr(run)(*avals)
+    return jaxpr.jaxpr, refs
+
+
+# one set of per-primitive cost conventions (bytes come from
+# hlo_analysis.dtype_bytes so both analyzers price with the same tables)
+_TRANSCENDENTAL = frozenset({
+    "exp", "exp2", "expm1", "log", "log1p", "logistic", "tanh", "sinh",
+    "cosh", "sin", "cos", "tan", "asin", "acos", "atan", "atan2", "sqrt",
+    "rsqrt", "cbrt", "pow", "erf", "erfc", "erf_inv",
+})
+_ELEMENTWISE = frozenset({
+    "add", "sub", "mul", "div", "max", "min", "rem", "neg", "abs", "sign",
+    "floor", "ceil", "round", "select_n", "clamp", "nextafter", "and",
+    "or", "xor", "not", "shift_left", "shift_right_logical",
+    "shift_right_arithmetic", "integer_pow", "square", "add_any",
+})
+_REDUCTION = frozenset({
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
+    "reduce_or", "reduce_xor", "argmax", "argmin", "cumsum", "cumprod",
+    "cummax", "cummin", "cumlogsumexp",
+})
+
+
+def _n_elems(shape) -> int:
+    return int(math.prod(shape)) if shape else 1
+
+
+def jaxpr_flops(jaxpr) -> tuple[int, int]:
+    """(flops, transcendentals) for one jaxpr, recursing into sub-jaxprs.
+
+    Conventions: ``dot_general`` is 2*batch*M*N*K from its
+    dimension_numbers; elementwise float/int arithmetic is 1/element
+    (bool-valued ops — comparisons, logical masks — are free);
+    transcendentals are 1 flop/element *and* counted separately;
+    reductions/cumulations cost one pass over the input; data movement
+    (broadcast/slice/convert/scatter from ref writes) is free.
+    """
+    flops = 0
+    transc = 0
+    for eqn in jaxpr.eqns:
+        # recurse into sub-jaxprs (pjit, custom_jvp, remat, ...) first
+        recursed = False
+        for v in eqn.params.values():
+            sub = v if hasattr(v, "eqns") else getattr(v, "jaxpr", None)
+            if sub is not None and hasattr(sub, "eqns"):
+                f, t = jaxpr_flops(sub)
+                flops += f
+                transc += t
+                recursed = True
+        if recursed:
+            continue
+        prim = eqn.primitive.name
+        out_aval = eqn.outvars[0].aval
+        if prim == "dot_general":
+            (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+            lhs = eqn.invars[0].aval.shape
+            rhs = eqn.invars[1].aval.shape
+            batch = _n_elems([lhs[i] for i in lb])
+            k = _n_elems([lhs[i] for i in lc])
+            m = _n_elems([lhs[i] for i in range(len(lhs))
+                          if i not in lc and i not in lb])
+            n = _n_elems([rhs[i] for i in range(len(rhs))
+                          if i not in rc and i not in rb])
+            flops += 2 * batch * m * n * k
+        elif prim in _REDUCTION:
+            flops += _n_elems(eqn.invars[0].aval.shape)
+        elif prim in _TRANSCENDENTAL:
+            n = _n_elems(out_aval.shape)
+            flops += n
+            transc += n
+        elif prim in _ELEMENTWISE:
+            if getattr(out_aval.dtype, "kind", "f") != "b":
+                flops += _n_elems(out_aval.shape)
+        # everything else (broadcast, slice, convert, scatter, iota,
+        # reshape, transpose, gather, ...) is data movement: 0 flops
+    return flops, transc
+
+
+# ---------------------------------------------------------------------------
+# full-grid index_map walk
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(slots=True)
+class OperandCost:
+    """Static traffic/coverage stats for one operand over the full grid."""
+    name: str
+    block: tuple            # resident block extent, operand coords
+    block_bytes: int
+    fetches: int            # pipeline copies: index-change transitions
+    distinct: int           # distinct block indices touched
+    revisit: float          # fetches / distinct
+    hbm_bytes: int          # fetches * block_bytes
+    max_runs_per_block: int  # >1 on an output = non-consecutive re-write
+    gap_tiles: int          # output tiles never written (0 for inputs)
+    expected_tiles: int
+
+
+def walk_spec(spec, aval, grid: tuple, *, is_output: bool,
+              name: str) -> OperandCost:
+    """Evaluate one spec's ``index_map`` over every grid step, in the
+    pipeline's lexicographic order (innermost axis fastest), and derive
+    exact traffic: a *fetch* is an index-change transition (the pipeline
+    keeps a resident block across steps whose index repeats consecutively);
+    output bytes count one writeback per run."""
+    full = tuple(int(d) for d in aval.shape)
+    block = _block_dims(spec, aval)
+    block_bytes = _n_elems(block) * dtype_bytes(aval.dtype)
+    imap = getattr(spec, "index_map", None)
+
+    fetches = 0
+    last_idx: Optional[tuple] = None
+    runs: dict[tuple, int] = {}
+    for step in itertools.product(*(range(n) for n in grid)):
+        idx = eval_index_map(spec, step) if imap is not None \
+            else (0,) * len(full)
+        if idx != last_idx:
+            fetches += 1
+            runs[idx] = runs.get(idx, 0) + 1
+            last_idx = idx
+    distinct = len(runs)
+
+    expected_tiles = _n_elems([full[d] // block[d] if block[d] else 1
+                               for d in range(len(full))])
+    gap_tiles = 0
+    if is_output:
+        tile_grid = [range(full[d] // block[d]) if block[d] else range(1)
+                     for d in range(len(full))]
+        covered = sum(1 for tile in itertools.product(*tile_grid)
+                      if tile in runs)
+        gap_tiles = expected_tiles - covered
+
+    return OperandCost(
+        name=name, block=block, block_bytes=block_bytes, fetches=fetches,
+        distinct=distinct, revisit=fetches / max(distinct, 1),
+        hbm_bytes=fetches * block_bytes,
+        max_runs_per_block=max(runs.values(), default=0),
+        gap_tiles=gap_tiles, expected_tiles=expected_tiles)
+
+
+# ---------------------------------------------------------------------------
+# one captured call -> cost record + RPL2xx findings
+# ---------------------------------------------------------------------------
+
+def analyze_call(call: CapturedCall, path: str, *,
+                 streaming: Optional[dict] = None,
+                 label: str = "") -> tuple[dict, list[Finding]]:
+    """Full static analysis of one captured ``pallas_call``: the cost
+    record (FLOPs / HBM bytes / VMEM / roofline prediction) and any
+    RPL201-204 findings. ``streaming`` is the kernel's declared RPL202
+    allowance ({operand position: reason})."""
+    streaming = streaming or {}
+    findings: list[Finding] = []
+
+    def emit(code: str, where: str, message: str) -> None:
+        findings.append(Finding(code=code, path=path, line=0, col=0,
+                                message=f"{where}: {message}",
+                                snippet=where))
+
+    grid = call.grid
+    steps = _n_elems(grid)
+
+    jaxpr, refs = trace_body(call)
+    step_flops, step_transc = jaxpr_flops(jaxpr)
+
+    in_costs = [walk_spec(spec, aval, grid, is_output=False,
+                          name=f"in[{i}]")
+                for i, (spec, aval) in enumerate(zip(call.in_specs,
+                                                     call.operands))]
+    out_costs = [walk_spec(spec, aval, grid, is_output=True,
+                           name=f"out[{i}]")
+                 for i, (spec, aval) in enumerate(zip(call.out_specs,
+                                                      call.out_shape))]
+
+    # RPL201 — VMEM budget: in/out blocks are double-buffered by the
+    # pipeline (next block streams in while this one computes), scratch is
+    # single-instance
+    block_bytes = sum(c.block_bytes for c in in_costs + out_costs)
+    scratch_bytes = sum(_n_elems(tuple(s.shape)) * dtype_bytes(s.dtype)
+                        for s in call.scratch_shapes)
+    vmem_bytes = 2 * block_bytes + scratch_bytes
+    if vmem_bytes > VMEM_BUDGET_BYTES:
+        emit("RPL201", "vmem", f"{vmem_bytes} bytes of VMEM "
+             f"(2x{block_bytes} double-buffered blocks + {scratch_bytes} "
+             f"scratch) exceeds the {VMEM_BUDGET_BYTES}-byte per-core "
+             "budget")
+
+    # RPL202 — undeclared input revisit
+    for i, c in enumerate(in_costs):
+        if c.revisit > 1.0 and i not in streaming:
+            emit("RPL202", c.name,
+                 f"re-fetched {c.fetches} times for {c.distinct} distinct "
+                 f"blocks (revisit x{c.revisit:.1f}) across a grid axis "
+                 "its index_map ignores — declare it in the module's "
+                 "STREAMING_OPERANDS with a reason, or reorder the grid")
+
+    # RPL203 — output coverage
+    for c in out_costs:
+        if c.gap_tiles:
+            emit("RPL203", c.name,
+                 f"output tiling leaves {c.gap_tiles} of "
+                 f"{c.expected_tiles} tiles unwritten — those regions "
+                 "keep whatever HBM held before the call")
+        if c.max_runs_per_block > 1:
+            emit("RPL203", c.name,
+                 f"an output block is written in {c.max_runs_per_block} "
+                 "non-consecutive runs — later visits silently overwrite "
+                 "earlier results (double-write)")
+
+    # RPL204 — dead refs
+    for box in refs:
+        if box.reads == 0 and box.writes == 0:
+            emit("RPL204", box.name,
+                 "ref is never read nor written by the kernel body — "
+                 "dead wiring (block still streams through VMEM every "
+                 "step)")
+
+    flops = step_flops * steps
+    hbm_bytes = sum(c.hbm_bytes for c in in_costs + out_costs)
+    intensity = flops / hbm_bytes if hbm_bytes else 0.0
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    bound_s = max(compute_s, memory_s)
+    cost = {
+        "kernel": path,
+        "shape": label,
+        "grid": list(grid),
+        "steps": steps,
+        "flops_per_step": step_flops,
+        "transcendentals_per_step": step_transc,
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "vmem_bytes": vmem_bytes,
+        "arithmetic_intensity": intensity,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "bound": "compute" if compute_s >= memory_s else "memory",
+        "roofline_frac": compute_s / bound_s if bound_s else 0.0,
+        "operands": [dataclasses.asdict(c) | {"block": list(c.block)}
+                     for c in in_costs + out_costs],
+    }
+    return cost, findings
+
+
+def analyze_traced(trace: Callable[[], Any], path: str, *,
+                   streaming: Optional[dict] = None,
+                   label: str = "",
+                   contract_check: bool = True
+                   ) -> tuple[list[dict], list[Finding]]:
+    """Run ``trace`` under the capturing stub and fully analyze every
+    ``pallas_call`` it makes. Contract violations (RPL1xx) are reported
+    too and short-circuit resource analysis for that call — deriving
+    costs from a malformed spec would be noise."""
+    with capture_pallas_calls() as stub:
+        trace()
+    costs: list[dict] = []
+    findings: list[Finding] = []
+    for call in stub.calls:
+        contract = check_call(call, path) if contract_check else []
+        if contract:
+            findings.extend(contract)
+            continue
+        cost, fnd = analyze_call(call, path, streaming=streaming,
+                                 label=label)
+        costs.append(cost)
+        findings.extend(fnd)
+    return costs, findings
+
+
+# ---------------------------------------------------------------------------
+# the shipped kernels, over a representative shape table
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(slots=True)
+class KernelCase:
+    """One (kernel, shape) row of the static cost table."""
+    path: str               # kernel module (reporting key)
+    module: str             # import path holding STREAMING_OPERANDS
+    label: str              # shape label in the table
+    trace: Callable[[], None]
+
+
+def _flash(B, H, KV, S, D, **kw):
+    def trace():
+        from repro.kernels.flash_attention.kernel import \
+            flash_attention_pallas
+        q = jnp.zeros((B, H, S, D), jnp.float32)
+        k = jnp.zeros((B, KV, S, D), jnp.float32)
+        pos = jnp.zeros((B, S), jnp.int32)
+        flash_attention_pallas(q, k, k, pos, pos, **kw)
+    return trace
+
+
+def _rms(rows, d):
+    def trace():
+        from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+        rmsnorm_pallas(jnp.zeros((rows, d), jnp.float32),
+                       jnp.zeros((d,), jnp.float32))
+    return trace
+
+
+def _ssd(B, L, H, P, G, N):
+    def trace():
+        from repro.kernels.ssd.kernel import ssd_pallas
+        ssd_pallas(jnp.zeros((B, L, H, P), jnp.float32),
+                   jnp.zeros((B, L, H), jnp.float32),
+                   jnp.zeros((H,), jnp.float32),
+                   jnp.zeros((B, L, G, N), jnp.float32),
+                   jnp.zeros((B, L, G, N), jnp.float32))
+    return trace
+
+
+_FLASH_PATH = "src/repro/kernels/flash_attention/kernel.py"
+_RMS_PATH = "src/repro/kernels/rmsnorm/kernel.py"
+_SSD_PATH = "src/repro/kernels/ssd/kernel.py"
+
+#: the static cost table rows: each kernel at its pallas_check trace shape
+#: plus one model-scale shape (what the perf push will tune against)
+KERNEL_CASES: list[KernelCase] = [
+    KernelCase(_FLASH_PATH, "repro.kernels.flash_attention.kernel",
+               "b1_h4_kv2_s256_d128",
+               _flash(1, 4, 2, 256, 128, causal=True, window=64,
+                      softcap=30.0)),
+    KernelCase(_FLASH_PATH, "repro.kernels.flash_attention.kernel",
+               "b1_h8_kv8_s2048_d128",
+               _flash(1, 8, 8, 2048, 128, causal=True)),
+    KernelCase(_RMS_PATH, "repro.kernels.rmsnorm.kernel",
+               "r256_d512", _rms(256, 512)),
+    KernelCase(_RMS_PATH, "repro.kernels.rmsnorm.kernel",
+               "r4096_d4096", _rms(4096, 4096)),
+    KernelCase(_SSD_PATH, "repro.kernels.ssd.kernel",
+               "b1_l256_h4_p64_g2_n32", _ssd(1, 256, 4, 64, 2, 32)),
+    KernelCase(_SSD_PATH, "repro.kernels.ssd.kernel",
+               "b2_l2048_h8_p64_g2_n64", _ssd(2, 2048, 8, 64, 2, 64)),
+]
+
+
+def _streaming_for(module: str) -> dict:
+    import importlib
+    mod = importlib.import_module(module)
+    return getattr(mod, "STREAMING_OPERANDS", {})
+
+
+def analyze_shipped() -> tuple[list[dict], list[Finding]]:
+    costs: list[dict] = []
+    findings: list[Finding] = []
+    for case in KERNEL_CASES:
+        c, f = analyze_traced(case.trace, case.path,
+                              streaming=_streaming_for(case.module),
+                              label=case.label)
+        costs.extend(c)
+        findings.extend(f)
+    return costs, findings
+
+
+def crosscheck_cost_model(costs: list[dict],
+                          slack: float = COST_MODEL_SLACK) -> dict:
+    """Cross-check ``CostModel``'s analytic fusion-level intensity against
+    the statically-derived per-kernel envelope.
+
+    The analytic cells assume ``ANALYTIC_FLOPS_PER_BYTE`` flops of useful
+    work per HBM byte for a whole fused step; a whole step is a mix of the
+    kernels analyzed here, so that constant must lie *inside* the envelope
+    [min kernel intensity / slack, max kernel intensity * slack] — if a
+    kernel edit collapses the envelope below it (or the constant drifts
+    outside), the analytic replay cells no longer describe the kernels
+    this repo actually ships.
+    """
+    from repro.launch.cost_model import ANALYTIC_FLOPS_PER_BYTE
+    intensities = {f"{c['kernel']}@{c['shape']}": c["arithmetic_intensity"]
+                   for c in costs}
+    if not intensities:
+        return {"ok": False, "reason": "no cost rows"}
+    lo = min(intensities.values()) / slack
+    hi = max(intensities.values()) * slack
+    ok = lo <= ANALYTIC_FLOPS_PER_BYTE <= hi
+    return {
+        "ok": ok,
+        "analytic_flops_per_byte": ANALYTIC_FLOPS_PER_BYTE,
+        "envelope": [lo, hi],
+        "slack": slack,
+        "kernel_intensities": intensities,
+    }
+
+
+def verdict() -> dict:
+    """One-line stamp for bench artifacts (mirrors ``lint.verdict``):
+    clean iff zero findings *and* the cost-model cross-check holds."""
+    costs, findings = analyze_shipped()
+    check = crosscheck_cost_model(costs)
+    return {
+        "tool": "replint.pallas_cost",
+        "clean": not findings and check["ok"],
+        "n_findings": len(findings),
+        "cost_model_ok": check["ok"],
+        "n_cost_rows": len(costs),
+    }
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.quality.pallas_cost",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("--report", default=None,
+                    help="write the JSON report here (e.g. "
+                         "artifacts/lint/pallas_cost.json)")
+    args = ap.parse_args(argv)
+    costs, findings = analyze_shipped()
+    check = crosscheck_cost_model(costs)
+    for f in findings:
+        print(f"{f.path}: {f.code} {f.message}")
+    if not check["ok"]:
+        print(f"pallas_cost: cost-model cross-check FAILED: "
+              f"analytic {check.get('analytic_flops_per_byte')} outside "
+              f"envelope {check.get('envelope')}")
+    if args.report:
+        report = {
+            "tool": "replint.pallas_cost",
+            "vmem_budget_bytes": VMEM_BUDGET_BYTES,
+            "n_findings": len(findings),
+            "clean": not findings and check["ok"],
+            "cost_model_check": check,
+            "cost_table": costs,
+            "findings": [{"code": f.code, "path": f.path,
+                          "message": f.message} for f in findings],
+        }
+        os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
+        with open(args.report, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=1)
+            fh.write("\n")
+    for c in costs:
+        print(f"  {c['kernel'].split('/')[-2]:>16s} {c['shape']:<24s} "
+              f"{c['flops']:.3e} flops  {c['hbm_bytes']:.3e} B  "
+              f"AI {c['arithmetic_intensity']:8.2f}  {c['bound']}-bound "
+              f"({c['roofline_frac']:.0%} roofline)")
+    print(f"pallas_cost: {len(costs)} (kernel, shape) rows, "
+          f"{len(findings)} findings, cost-model check "
+          f"{'ok' if check['ok'] else 'FAILED'}")
+    return 0 if not findings and check["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -81,9 +81,14 @@ def _in_engine(path: str) -> bool:
 
 
 def _in_hot(path: str) -> bool:
+    # launch/cost_model.py and launch/hlo_analysis.py joined the list when
+    # the replay started repricing every elastic event through them — they
+    # are engine-adjacent hot paths now, not offline tooling
     return path.endswith(("repro/cluster/replay.py",
                           "repro/cluster/scheduler.py",
-                          "repro/cluster/serve_replay.py"))
+                          "repro/cluster/serve_replay.py",
+                          "repro/launch/cost_model.py",
+                          "repro/launch/hlo_analysis.py"))
 
 
 def _anywhere(path: str) -> bool:

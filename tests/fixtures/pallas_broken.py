@@ -1,10 +1,14 @@
-"""Deliberately broken Pallas kernels for ``repro.quality.pallas_check``.
+"""Deliberately broken Pallas kernels for the static analyzers.
 
 Each ``bad_*`` thunk makes exactly one ``pl.pallas_call`` violating exactly
-one contract the checker must flag (the code in the name's comment);
-``good_control`` is a correct call the checker must pass. The thunks are
-only ever traced under ``capture_pallas_calls()`` — the kernel bodies
-never execute, so they are minimal no-ops.
+one contract/resource rule the analyzers must flag (the code in the name's
+comment); ``good_control`` is a correct call both must pass. RPL1xx
+fixtures (``repro.quality.pallas_check``) are only ever traced under
+``capture_pallas_calls()`` — their bodies never execute, so they are
+minimal no-ops. RPL2xx fixtures (``repro.quality.pallas_cost``) have
+their bodies *abstract-interpreted* through ``jax.make_jaxpr``, so each
+body genuinely reads its input and writes its output (except the RPL204
+fixture, whose dead ref is the point).
 """
 from __future__ import annotations
 
@@ -67,3 +71,65 @@ def bad_kernel_arity():        # RPL105: scratch wired but no scratch ref
     spec = pl.BlockSpec((128, 256), lambda i: (i, 0))
     _call(spec, spec, grid=(2,),
           scratch=[pltpu.VMEM((128, 128), jnp.float32)])
+
+
+def bad_index_map_corner():    # RPL101: right rank at origin, wrong off it
+    spec = pl.BlockSpec((128, 256),
+                        lambda i: (i, 0) if i == 0 else (i,))
+    good = pl.BlockSpec((128, 256), lambda i: (i, 0))
+    _call(spec, good, grid=(2,))
+
+
+def good_grid_spec():          # valid call through the grid_spec= bundle
+    spec = pl.BlockSpec((128, 256), lambda i: (i, 0))
+    x = jnp.zeros(_X, jnp.float32)
+    pl.pallas_call(
+        _noop2,
+        grid_spec=pl.GridSpec(grid=(2,), in_specs=[spec], out_specs=spec),
+        out_shape=jax.ShapeDtypeStruct(_X, jnp.float32),
+        interpret=True)(x)
+
+
+# --------------------------------------------------------------------------
+# RPL2xx resource fixtures (pallas_cost) — bodies are abstract-interpreted
+# --------------------------------------------------------------------------
+
+def _copy2(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def bad_vmem_budget():         # RPL201: two 64 MiB whole-operand blocks
+    big = (4096, 4096)
+    spec = pl.BlockSpec(big, lambda i: (0, 0))
+    pl.pallas_call(
+        _copy2, grid=(1,), in_specs=[spec], out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(big, jnp.float32),
+        interpret=True)(jnp.zeros(big, jnp.float32))
+
+
+def bad_revisit():             # RPL202: input re-fetched across axis i
+    spec = pl.BlockSpec((128, 128), lambda i, j: (j, 0))
+    good = pl.BlockSpec((128, 128), lambda i, j: (i, j))
+    _call(spec, good, grid=(2, 2), kernel=_copy2)
+
+
+def bad_output_gap():          # RPL203: both steps write tile (0, 0)
+    spec = pl.BlockSpec((128, 256), lambda i: (i, 0))
+    gap = pl.BlockSpec((128, 256), lambda i: (0, 0))
+    _call(spec, gap, grid=(2,), kernel=_copy2)
+
+
+def bad_output_overlap():      # RPL203: output blocks in 2 runs each
+    def body(x_ref, o_ref):
+        o_ref[...] = jnp.full(o_ref.shape, jnp.sum(x_ref[...]),
+                              o_ref.dtype)
+    spec = pl.BlockSpec((128, 128), lambda i, j: (i, j))
+    over = pl.BlockSpec((128, 256), lambda i, j: (j, 0))
+    _call(spec, over, grid=(2, 2), kernel=body)
+
+
+def bad_unused_ref():          # RPL204: x_ref wired but never touched
+    def body(x_ref, o_ref):
+        o_ref[...] = jnp.zeros(o_ref.shape, o_ref.dtype)
+    spec = pl.BlockSpec((128, 256), lambda i: (i, 0))
+    _call(spec, spec, grid=(2,), kernel=body)

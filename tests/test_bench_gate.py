@@ -48,6 +48,12 @@ def _write_all(dirp, scale=1.0, fingerprint=1234.0):
                               "mixtral_over_dense": 3.5 * scale,
                               "deepseek_a2a_gib_per_step": 9.75 * scale,
                               "dryrun_fingerprint": fingerprint})
+    # the static kernel cost table (deterministic, but gated with the
+    # same uniform bands so these synthetic scaling fixtures cover it)
+    _write(dirp, "kernel_cost", {"cost_model_agreement": 1.0 * scale,
+                                 "n_rows": 6.0 * scale,
+                                 "min_intensity": 0.5 * scale,
+                                 "max_intensity": 61.0 * scale})
 
 
 def test_gate_passes_within_tolerance(tmp_path):
@@ -153,6 +159,27 @@ def test_dryrun_fingerprint_guards_cost_model_rows(tmp_path):
     assert any(f.startswith("roofline.n_cells") for f in failures)
     assert any(f.startswith("moe_comm.deepseek_over_dense")
                for f in failures)
+
+
+def test_dirty_stamps_are_refused(tmp_path):
+    """Artifacts stamped by a lint-dirty or kernel-resource-dirty tree
+    fail the gate outright, before any metric is compared."""
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    _write_all(str(base))
+    _write_all(str(fresh))
+    assert check(str(fresh), str(base)) == []
+    _write(str(fresh), "pool", {"events_per_calib": 0.4,
+                                "replint_clean": 0.0,
+                                "replint_findings": 3.0})
+    failures = check(str(fresh), str(base))
+    assert any("replint" in f for f in failures)
+    _write(str(fresh), "pool", {"events_per_calib": 0.4,
+                                "replint_clean": 1.0,
+                                "pallas_cost_clean": 0.0,
+                                "pallas_cost_findings": 2.0})
+    failures = check(str(fresh), str(base))
+    assert any("RPL2xx" in f for f in failures)
+    assert not any("replint findings" in f for f in failures)
 
 
 def test_tolerance_is_configurable(tmp_path):

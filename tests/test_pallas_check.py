@@ -72,10 +72,55 @@ def test_good_control_is_clean():
     ("bad_divisibility", "RPL103"),
     ("bad_alignment", "RPL104"),
     ("bad_kernel_arity", "RPL105"),
+    ("bad_index_map_corner", "RPL101"),
 ])
 def test_broken_fixture_flags_exactly_its_code(name, code):
     mod = _fixtures()
     assert _codes(getattr(mod, name)) == [code]
+
+
+def test_corner_finding_names_the_corner():
+    # the map is fine at the origin; only the (1,) corner misbehaves
+    mod = _fixtures()
+    (f,) = pc.check_traced(mod.bad_index_map_corner, "fixture.py")
+    assert "corner (1,)" in f.message
+
+
+def test_grid_corners_dedup():
+    assert pc.grid_corners(()) == [()]
+    assert pc.grid_corners((1,)) == [(0,)]
+    assert pc.grid_corners((3,)) == [(0,), (2,)]
+    assert pc.grid_corners((2, 1, 3)) == [(0, 0, 0), (0, 0, 2),
+                                          (1, 0, 0), (1, 0, 2)]
+
+
+# ---------------------------------------------------------------------------
+# the grid_spec= calling convention and unknown-kwarg recording
+# ---------------------------------------------------------------------------
+
+def test_grid_spec_branch_unpacks_and_is_clean():
+    mod = _fixtures()
+    with pc.capture_pallas_calls() as stub:
+        mod.good_grid_spec()
+    (call,) = stub.calls
+    assert call.grid == (2,)
+    assert len(call.in_specs) == 1 and call.out_specs
+    assert pc.check_call(call, "p") == []
+
+
+def test_extra_kwargs_recorded_not_dropped():
+    mod = _fixtures()
+    with pc.capture_pallas_calls() as stub:
+        mod.good_control()
+    (call,) = stub.calls
+    # the fixtures pass interpret=True, which the stub does not model
+    assert call.extra_kwargs == ["interpret"]
+
+
+def test_shipped_report_surfaces_kwargs():
+    findings, kwargs_seen = pc.shipped_report()
+    assert findings == []
+    assert "interpret" in kwargs_seen
 
 
 def test_findings_name_the_offending_spec():

@@ -1,0 +1,264 @@
+"""Tests for ``repro.quality.pallas_cost`` — the static resource analyzer
+must derive hand-checkable costs for the shipped kernels, pass all three
+clean, flag every RPL2xx fixture with exactly its code, and agree with
+``CostModel``'s analytic kernel constant within the stated slack.
+
+Everything runs on CPU: kernel bodies are abstract-interpreted through
+``jax.make_jaxpr``; nothing is lowered or executed.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.quality import pallas_cost as pcost  # noqa: E402
+from repro.quality.pallas_check import capture_pallas_calls  # noqa: E402
+
+FIXTURES = Path(__file__).resolve().parent / "fixtures"
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _fixtures():
+    if str(FIXTURES) not in sys.path:
+        sys.path.insert(0, str(FIXTURES))
+    import pallas_broken
+    return pallas_broken
+
+
+def _flash_cost():
+    costs, findings = pcost.analyze_traced(
+        pcost.KERNEL_CASES[0].trace, "flash",
+        streaming=pcost._streaming_for(pcost.KERNEL_CASES[0].module),
+        label="trace")
+    assert findings == []
+    (cost,) = costs
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# golden static cost table: flash_attention at the pallas_check trace shape
+# (B, H, KV, S, D) = (1, 4, 2, 256, 128), block_q = block_kv = 128
+# ---------------------------------------------------------------------------
+
+def test_flash_golden_hbm_bytes_exact():
+    # hand-computed, walking the (1, 4, 2, 2) grid innermost-fastest:
+    #   q_pos  (1,128) i32, map (b,iq):   8 fetches x    512 B =     4096
+    #   kv_pos (1,128) i32, map (b,ik):  16 fetches x    512 B =     8192
+    #   q  (1,1,128,128) f32, (b,h,iq):   8 fetches x  65536 B =   524288
+    #   k  (1,1,128,128) f32, streamed:  16 fetches x  65536 B =  1048576
+    #   v  same as k:                    16 fetches x  65536 B =  1048576
+    #   o  (1,1,128,128) f32:             8 runs    x  65536 B =   524288
+    cost = _flash_cost()
+    assert cost["hbm_bytes"] == 3_158_016
+    fetches = {o["name"]: o["fetches"] for o in cost["operands"]}
+    assert fetches == {"in[0]": 8, "in[1]": 16, "in[2]": 8,
+                       "in[3]": 16, "in[4]": 16, "out[0]": 8}
+
+
+def test_flash_golden_flops_within_tolerance():
+    # the two MXU matmuls dominate: qk^T and pv are each
+    # 2*128*128*128 = 4,194,304 flops/step -> 8,388,608/step. The static
+    # count adds elementwise/softmax work and charges @pl.when bodies on
+    # every step (documented upper bound), so it must land within 5%
+    # above the matmul floor — never below it.
+    cost = _flash_cost()
+    dot_floor = 2 * (2 * 128 * 128 * 128)
+    assert dot_floor <= cost["flops_per_step"] <= dot_floor * 1.05
+    assert cost["flops"] == cost["flops_per_step"] * 16
+    assert cost["steps"] == 16
+
+
+def test_flash_golden_vmem_exact():
+    # 2x double-buffered blocks (2x512 + 4x65536 in + 65536 out)
+    # + 3 scratch buffers (m, l: (128,128) f32; acc: (128,128) f32)
+    cost = _flash_cost()
+    blocks = 2 * (512 + 512 + 4 * 65536)   # qp + kp + (q, k, v, o)
+    scratch = 3 * 65536                    # m, l, acc — single-instance
+    assert cost["vmem_bytes"] == blocks + scratch == 722_944
+
+
+def test_flash_transcendentals_counted():
+    # softcap tanh + online-softmax exps: transcendental work must be
+    # visible (it is what distinguishes this body from a pure matmul)
+    cost = _flash_cost()
+    assert cost["transcendentals_per_step"] > 0
+
+
+def test_flash_is_memory_bound_at_trace_shape():
+    cost = _flash_cost()
+    assert cost["bound"] == "memory"
+    assert 40 < cost["arithmetic_intensity"] < 50
+    assert 0 < cost["roofline_frac"] < 1
+
+
+# ---------------------------------------------------------------------------
+# the full shipped table
+# ---------------------------------------------------------------------------
+
+def test_shipped_kernels_are_clean():
+    costs, findings = pcost.analyze_shipped()
+    assert findings == [], [f"{f.path}: {f.code} {f.message}"
+                            for f in findings]
+    assert len(costs) == len(pcost.KERNEL_CASES)
+
+
+def test_rmsnorm_intensity_is_memory_bound_constant():
+    # rmsnorm moves every element twice (read + write) for ~2 flops/elem:
+    # intensity ~0.5 regardless of shape — the memory-bound floor of the
+    # envelope
+    costs, _ = pcost.analyze_shipped()
+    rms = [c for c in costs if "rmsnorm" in c["kernel"]]
+    assert len(rms) == 2
+    for c in rms:
+        assert 0.3 < c["arithmetic_intensity"] < 0.8
+        assert c["bound"] == "memory"
+
+
+def test_every_shipped_row_fits_vmem():
+    costs, _ = pcost.analyze_shipped()
+    for c in costs:
+        assert c["vmem_bytes"] <= pcost.VMEM_BUDGET_BYTES, c["shape"]
+
+
+# ---------------------------------------------------------------------------
+# RPL2xx fixtures flag exactly their codes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,code", [
+    ("bad_vmem_budget", "RPL201"),
+    ("bad_revisit", "RPL202"),
+    ("bad_output_gap", "RPL203"),
+    ("bad_output_overlap", "RPL203"),
+    ("bad_unused_ref", "RPL204"),
+])
+def test_broken_fixture_flags_exactly_its_code(name, code):
+    mod = _fixtures()
+    _, findings = pcost.analyze_traced(getattr(mod, name), name)
+    assert sorted(f.code for f in findings) == [code]
+
+
+def test_good_fixtures_are_cost_clean():
+    mod = _fixtures()
+    for name in ("good_control", "good_grid_spec"):
+        costs, findings = pcost.analyze_traced(getattr(mod, name), name)
+        assert findings == [], name
+        assert len(costs) == 1
+
+
+def test_unused_ref_finding_names_the_ref():
+    mod = _fixtures()
+    _, findings = pcost.analyze_traced(mod.bad_unused_ref, "f")
+    (f,) = findings
+    assert "in[0]" in f.message
+
+
+def test_contract_violation_short_circuits_costs():
+    # a malformed spec (RPL1xx) must not produce a cost row — resource
+    # numbers derived from a broken contract would be noise
+    mod = _fixtures()
+    costs, findings = pcost.analyze_traced(mod.bad_divisibility, "f")
+    assert costs == []
+    assert any(f.code == "RPL103" for f in findings)
+
+
+def test_streaming_allowance_suppresses_rpl202():
+    mod = _fixtures()
+    _, findings = pcost.analyze_traced(
+        mod.bad_revisit, "f", streaming={0: "declared for the test"})
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# the abstract interpreter
+# ---------------------------------------------------------------------------
+
+def test_refbox_counts_reads_and_writes():
+    mod = _fixtures()
+    with capture_pallas_calls() as stub:
+        mod.good_control()
+    (call,) = stub.calls
+    _, refs = pcost.trace_body(call)
+    assert [r.name for r in refs] == ["in[0]", "out[0]"]
+    assert refs[0].reads == 1 and refs[0].writes == 0
+    assert refs[1].reads == 0 and refs[1].writes == 1
+
+
+def test_trace_body_handles_pl_when_and_program_id():
+    # the flash body uses both; tracing must succeed and touch every ref
+    with capture_pallas_calls() as stub:
+        pcost.KERNEL_CASES[0].trace()
+    (call,) = stub.calls
+    _, refs = pcost.trace_body(call)
+    assert len(refs) == 9            # 5 in + 1 out + 3 scratch
+    for r in refs:
+        assert r.reads + r.writes > 0, r.name
+
+
+def test_jaxpr_flops_dot_general():
+    import jax.numpy as jnp
+
+    def f(a, b):
+        return a @ b
+
+    jaxpr = jax.make_jaxpr(f)(jnp.zeros((8, 16)), jnp.zeros((16, 4)))
+    flops, transc = pcost.jaxpr_flops(jaxpr.jaxpr)
+    assert flops == 2 * 8 * 16 * 4
+    assert transc == 0
+
+
+def test_jaxpr_flops_bool_ops_are_free():
+    import jax.numpy as jnp
+
+    def f(a, b):
+        return jnp.where(a > b, a, b)
+
+    jaxpr = jax.make_jaxpr(f)(jnp.zeros((32,)), jnp.zeros((32,)))
+    flops, _ = pcost.jaxpr_flops(jaxpr.jaxpr)
+    # the comparison is free; only select_n pays
+    assert flops == 32
+
+
+# ---------------------------------------------------------------------------
+# cost-model cross-check + verdict + committed report agreement
+# ---------------------------------------------------------------------------
+
+def test_cost_model_crosscheck_holds():
+    costs, _ = pcost.analyze_shipped()
+    check = pcost.crosscheck_cost_model(costs)
+    assert check["ok"], check
+    lo, hi = check["envelope"]
+    assert lo <= check["analytic_flops_per_byte"] <= hi
+
+
+def test_cost_model_crosscheck_fails_outside_envelope():
+    fake = [{"kernel": "k", "shape": "s", "arithmetic_intensity": 100.0},
+            {"kernel": "k", "shape": "t", "arithmetic_intensity": 200.0}]
+    assert not pcost.crosscheck_cost_model(fake)["ok"]
+    assert not pcost.crosscheck_cost_model([])["ok"]
+
+
+def test_verdict_is_clean():
+    v = pcost.verdict()
+    assert v["clean"] and v["cost_model_ok"]
+    assert v["n_findings"] == 0
+    assert v["n_cost_rows"] == len(pcost.KERNEL_CASES)
+
+
+def test_committed_report_matches_fresh_analysis():
+    # the committed artifact is documentation (README renders it); it must
+    # not drift from what the analyzer derives at head
+    path = REPO / "artifacts" / "lint" / "pallas_cost.json"
+    committed = json.loads(path.read_text())
+    assert committed["clean"] is True
+    costs, _ = pcost.analyze_shipped()
+    fresh = json.loads(json.dumps(costs))    # normalize tuples/ints
+    committed_rows = {(c["kernel"], c["shape"]):
+                      (c["flops"], c["hbm_bytes"], c["vmem_bytes"])
+                      for c in committed["cost_table"]}
+    fresh_rows = {(c["kernel"], c["shape"]):
+                  (c["flops"], c["hbm_bytes"], c["vmem_bytes"])
+                  for c in fresh}
+    assert committed_rows == fresh_rows
