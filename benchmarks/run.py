@@ -49,6 +49,8 @@ TRAJECTORY_EXTRAS = {
     "moe_mixtral_over_dense": ("moe_comm", "mixtral_over_dense"),
     "serve_joint_attainment": ("serve", "slo_joint_attainment"),
     "serve_decoded_tok_per_s": ("serve", "decoded_tok_per_s"),
+    "serve_faults": ("serve", "events_per_calib_serve_faults"),
+    "serve_inject_ratio": ("serve", "replay_wall_inject_ratio"),
     # static kernel cost envelope: deterministic, so any movement in the
     # history is a real kernel blocking/indexing change
     "kernel_min_intensity": ("kernel_cost", "min_intensity"),

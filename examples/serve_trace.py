@@ -27,14 +27,25 @@ Rates come from the committed prefill/decode dry-run cells when present
 (``CostModel.load``) and the deterministic analytic roofline otherwise —
 pass ``--analytic`` to force the hermetic path CI uses.
 
+With ``--inject``, the §5 hardware/infra taxonomy strikes serving
+instances (scaled by ``--rate-scale`` so a short demo window still sees
+incidents): each failure is diagnosed from a synthesized serving log,
+the verdict picks cordon-and-respawn vs in-place restart, killed
+requests retry through the prefill fleet, and the scorecard grows a
+fault section — retries/drops/shed, degraded minutes, and per-class SLO
+violation attribution — plus the extended conservation law
+``evicted + killed == recomputed``.
+
   PYTHONPATH=src python examples/serve_trace.py \
       [--requests N] [--horizon MIN] [--arch A] [--analytic] \
-      [--prefill N] [--decode N] [--kv-pages N] [--max-batch N]
+      [--prefill N] [--decode N] [--kv-pages N] [--max-batch N] \
+      [--inject] [--rate-scale X]
 """
 import argparse
 import time
 
-from repro.cluster import (ServeReplayConfig, generate_requests,
+from repro.cluster import (SERVING_TAXONOMY, FailureInjector,
+                           ServeReplayConfig, generate_requests,
                            replay_requests)
 
 
@@ -58,6 +69,14 @@ def main() -> None:
                          "try 1024 to force eviction churn")
     ap.add_argument("--max-batch", type=int, default=64,
                     help="continuous-batching occupancy cap")
+    ap.add_argument("--inject", action="store_true",
+                    help="inject the §5 hardware/infra taxonomy into the "
+                         "fleet (diagnosis-driven recovery + graceful "
+                         "degradation)")
+    ap.add_argument("--rate-scale", type=float, default=600.0,
+                    help="failure-rate multiplier for --inject (datacenter "
+                         "per-GPU-hour hazards are too rare for a "
+                         "minutes-long demo window)")
     args = ap.parse_args()
 
     print(f"=== generating {args.requests} requests over "
@@ -73,13 +92,18 @@ def main() -> None:
     if args.analytic:
         from repro.launch.cost_model import CostModel
         cm = CostModel.analytic((args.arch,))
+    inj = None
+    if args.inject:
+        inj = FailureInjector(SERVING_TAXONOMY, seed=1,
+                              rate_scale=args.rate_scale)
     cfg = ServeReplayConfig(arch=args.arch, cost_model=cm,
                             n_prefill=args.prefill, n_decode=args.decode,
                             kv_pages=args.kv_pages,
-                            max_batch=args.max_batch)
+                            max_batch=args.max_batch, injector=inj)
 
     print(f"\n=== replaying through {args.prefill} prefill + "
-          f"{args.decode} decode instances ({args.arch}) ===")
+          f"{args.decode} decode instances ({args.arch}"
+          f"{', faults injected' if inj else ''}) ===")
     t0 = time.perf_counter()
     res = replay_requests(reqs, cfg)
     wall = time.perf_counter() - t0
@@ -119,6 +143,26 @@ def main() -> None:
     print(f"  fleet: {fl['n_prefill']}+{fl['n_decode']} instances x "
           f"{fl['gpus_per_instance']} GPUs on {fl['nodes_used']} nodes "
           f"(of {fl['total_gpus']} GPUs)")
+
+    if "faults" in s:
+        f = s["faults"]
+        print(f"  faults: {f['injected']} injected -> "
+              f"{f['respawns']} respawns + {f['inplace_restarts']} "
+              f"in-place restarts ({f['cordoned_nodes']} nodes cordoned); "
+              f"degraded {f['degraded_min']:.1f} min")
+        print(f"    {f['retries']} retries, {f['drops']} drops, "
+              f"{f['shed']} shed, {f['hol_skips']} HOL skips; "
+              f"{f['killed_tokens']} tokens killed "
+              f"(evicted + killed == recomputed: "
+              f"{kv['evicted_tokens']} + {f['killed_tokens']} == "
+              f"{kv['recompute_prefill_tokens']})")
+        for name, c in f["by_class"].items():
+            print(f"    {name}: {c['failures']} failures "
+                  f"({c['prefill']} prefill / {c['decode']} decode), "
+                  f"verdicts {c['verdicts']}, "
+                  f"SLO viol TTFT {c['slo_ttft_violations']} / "
+                  f"TPOT {c['slo_tpot_violations']}, "
+                  f"down {c['downtime_min']:.0f} min")
 
 
 if __name__ == "__main__":

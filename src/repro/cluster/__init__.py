@@ -5,8 +5,9 @@ from repro.cluster.workload import (BEST_EFFORT_TYPES, JobRecord,
                                     SEREN, generate_jobs, generate_requests)
 from repro.cluster.scheduler import (NEVER_STARTED, ReservationScheduler,
                                      simulate_queue)
-from repro.cluster.failures import (DEFAULT_TAXONOMY, QUOTA_RECLAIM,
-                                    FailureInjector, ReplayFailureClass,
+from repro.cluster.failures import (DEFAULT_TAXONOMY, QUOTA_RECLAIM, SERVE,
+                                    SERVING_TAXONOMY, FailureInjector,
+                                    ReplayFailureClass,
                                     synthesize_failure_log)
 from repro.cluster.replay import (DiagnosisLoop, NodeLedger, ReplayConfig,
                                   ReplayResult, replay_trace)
@@ -14,14 +15,15 @@ from repro.cluster.serve_replay import (ServeReplayConfig, ServeReplayResult,
                                         replay_requests)
 from repro.cluster.analysis import (head_delay_stats, placement_stats,
                                     pool_stats, recovery_stats,
-                                    trace_summary)
+                                    serving_fault_stats, trace_summary)
 
 __all__ = ["JobRecord", "WorkloadSpec", "KALOS", "SEREN", "generate_jobs",
            "BEST_EFFORT_TYPES", "RequestRecord", "generate_requests",
            "ServeReplayConfig", "ServeReplayResult", "replay_requests",
            "ReservationScheduler", "simulate_queue", "NEVER_STARTED",
            "FailureInjector", "ReplayFailureClass", "DEFAULT_TAXONOMY",
-           "QUOTA_RECLAIM", "synthesize_failure_log", "DiagnosisLoop",
+           "SERVING_TAXONOMY", "SERVE", "QUOTA_RECLAIM",
+           "synthesize_failure_log", "DiagnosisLoop",
            "NodeLedger", "ReplayConfig", "ReplayResult", "replay_trace",
            "head_delay_stats", "placement_stats", "pool_stats",
-           "recovery_stats", "trace_summary"]
+           "recovery_stats", "serving_fault_stats", "trace_summary"]

@@ -157,6 +157,54 @@ def recovery_stats(result) -> dict:
     }
 
 
+def serving_fault_stats(result) -> dict:
+    """Serving-side analogue of :func:`recovery_stats`: how injected §5
+    incidents degraded a ``replay_requests`` run (needs a
+    ``ServeReplayResult`` produced with ``config.injector`` set).
+
+    Top-level scalars give the episode totals — retries/drops/shed,
+    destroyed-and-recomputed KV work (``killed_tokens``), goodput lost to
+    dropped requests, wall minutes spent degraded, and the recovery mix
+    (hardware-verdict respawns vs transient in-place restarts).
+    ``by_class`` attributes all of it, plus TTFT/TPOT SLO violations, to
+    the failure class that caused it. This is what ``summary()["faults"]``
+    embeds, so every leaf is a plain scalar (schema contract).
+    """
+    stats = result.fault_stats or {}
+    by_class = {}
+    for name in sorted(stats):
+        fs = stats[name]
+        by_class[name] = {
+            "failures": int(fs.failures),
+            "prefill": int(fs.prefill),
+            "decode": int(fs.decode),
+            "retries": int(fs.retries),
+            "drops": int(fs.drops),
+            "shed": int(fs.shed),
+            "killed_tokens": int(fs.killed_tokens),
+            "lost_goodput_tokens": int(fs.lost_goodput_tokens),
+            "slo_ttft_violations": int(fs.slo_ttft),
+            "slo_tpot_violations": int(fs.slo_tpot),
+            "downtime_min": float(fs.downtime_min),
+            "verdicts": {v: int(c) for v, c in sorted(fs.verdicts.items())},
+        }
+    return {
+        "injected": int(result.faults_injected),
+        "retries": int(result.retries_total),
+        "drops": len(result.dropped_ids),
+        "shed": len(result.shed_ids),
+        "hol_skips": int(result.hol_skips),
+        "killed_tokens": int(result.killed_tokens),
+        "lost_goodput_tokens": int(sum(
+            fs.lost_goodput_tokens for fs in stats.values())),
+        "degraded_min": float(result.degraded_min),
+        "respawns": int(result.respawns),
+        "inplace_restarts": int(result.inplace_restarts),
+        "cordoned_nodes": int(result.cordoned_nodes),
+        "by_class": by_class,
+    }
+
+
 def _tail(xs, qs=(50, 95, 99)) -> dict:
     arr = np.asarray(xs, dtype=np.float64)
     if arr.size == 0:

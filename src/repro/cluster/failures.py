@@ -35,6 +35,11 @@ from typing import Optional, Sequence
 
 HARDWARE, INFRA, PREEMPTION = "hardware", "infra", "preemption"
 
+# the jtype under which the serving replay draws failures: serving *is* the
+# reservation (§3.2), so the PREEMPTION class is disabled for it below —
+# only the physical §5 hazards (hardware, infra) strike serving instances
+SERVE = "serve"
+
 # the *emergent* counterpart of the injected PREEMPTION class: a best-effort
 # job preempted because dispatch or elastic regrowth reclaimed its revocable
 # lease (repro.cluster.replay). Kept as a separate ledger key so the
@@ -92,10 +97,18 @@ DEFAULT_TAXONOMY: tuple[ReplayFailureClass, ...] = (
         PREEMPTION, rate_per_gpu_hour=2.0e-4,
         # only best-effort (spare-pool) types can be preempted — the
         # reservation shields pretraining-class jobs (§3.2)
-        jtype_mult={"pretrain": 0.0, "sft": 0.0, "mllm": 0.0},
+        jtype_mult={"pretrain": 0.0, "sft": 0.0, "mllm": 0.0, SERVE: 0.0},
         needs_cordon=False,
         restart_overhead_min=2.0),
 )
+
+# the serving fleet's view of the taxonomy: preemption excluded outright
+# (serving is the reservation that *causes* preemptions, it never suffers
+# them). A DEFAULT_TAXONOMY injector is equally safe for jtype ``SERVE`` —
+# preemption's per-jtype multiplier is 0.0 there, and zero-rate classes are
+# skipped without consuming RNG — so both spellings draw identically.
+SERVING_TAXONOMY: tuple[ReplayFailureClass, ...] = tuple(
+    c for c in DEFAULT_TAXONOMY if c.name != PREEMPTION)
 
 # scheduler-initiated eviction notices (paper §3.2 quota reclamation) — the
 # preemption class has no Table-3 root cause, so it carries its own log
@@ -111,7 +124,7 @@ PREEMPTION_LOG_TEMPLATES: tuple[str, ...] = (
 
 
 def synthesize_failure_log(cls: ReplayFailureClass, *, seed: int = 0,
-                           n_normal: int = 24
+                           n_normal: int = 24, flavor: str = "train"
                            ) -> tuple[list[str], Optional[str]]:
     """Synthesize the runtime-log snippet an injected ``cls`` incident would
     leave behind: init banner + metric spam + a cascaded failure tail drawn
@@ -121,6 +134,8 @@ def synthesize_failure_log(cls: ReplayFailureClass, *, seed: int = 0,
     failure name (``None`` for scheduler preemptions, which have no Table-3
     root cause). The replay engine feeds these through the §6.1 diagnosis
     pipeline and lets the verdict pick the recovery policy.
+    ``flavor="serve"`` emits an inference engine's banner/heartbeat instead
+    of a trainer's (same failure tails, same RNG consumption).
     """
     from repro.core.ft.events import BY_NAME, fill_template, generate_log
     rng = random.Random(seed ^ 0xFA11)
@@ -128,8 +143,9 @@ def synthesize_failure_log(cls: ReplayFailureClass, *, seed: int = 0,
         weights = [BY_NAME[n].num for n in cls.log_failure_types]
         truth = rng.choices(cls.log_failure_types, weights=weights, k=1)[0]
         return (generate_log(BY_NAME[truth], seed=rng.randrange(2 ** 30),
-                             n_normal=n_normal), truth)
-    lines = generate_log(None, seed=rng.randrange(2 ** 30), n_normal=n_normal)
+                             n_normal=n_normal, flavor=flavor), truth)
+    lines = generate_log(None, seed=rng.randrange(2 ** 30),
+                         n_normal=n_normal, flavor=flavor)
     for t in PREEMPTION_LOG_TEMPLATES:
         lines.append(fill_template(t, rng))
     return lines, None

@@ -198,12 +198,16 @@ class DiagnosisLoop:
     incidents into cheap rule hits.
     """
 
-    __slots__ = ("system", "n_variants", "_rng", "_cache", "incidents")
+    __slots__ = ("system", "n_variants", "flavor", "_rng", "_cache",
+                 "incidents")
 
     def __init__(self, system: Optional[FailureDiagnosisSystem] = None, *,
-                 n_variants: int = 32, seed: int = 0):
+                 n_variants: int = 32, seed: int = 0, flavor: str = "train"):
         self.system = system or FailureDiagnosisSystem()
         self.n_variants = max(1, n_variants)
+        # "train" or "serve": which banner/heartbeat the synthesized logs
+        # carry (the serving replay diagnoses inference-engine logs)
+        self.flavor = flavor
         self._rng = random.Random(seed ^ 0xD1A6)
         self._cache: dict = {}
         self.incidents = 0
@@ -221,7 +225,8 @@ class DiagnosisLoop:
         hit = self._cache.get(key)
         if hit is None:
             seed = (zlib.crc32(cls.name.encode()) << 8) ^ variant
-            lines, truth = synthesize_failure_log(cls, seed=seed)
+            lines, truth = synthesize_failure_log(cls, seed=seed,
+                                                  flavor=self.flavor)
             diag = self.system.diagnose(lines)
             hit = (verdict_class(diag), diag, truth)
             self._cache[key] = hit
@@ -1624,7 +1629,13 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
                 for n in det.faulty:
                     fleet.faulty.discard(n)
                 if ledger is None:
-                    take_r, take_s = sched.cordon(k)
+                    # node-less approximation: without placement the node's
+                    # free-GPU share is unknowable, and the rest of the node
+                    # is held by co-located jobs that keep running to their
+                    # own completion — so only the failing job's released
+                    # share may drain (draining the nominal node width
+                    # double-counts the co-located jobs' GPUs)
+                    take_r, take_s = sched.cordon(min(job.gpus, k))
                 else:
                     cfree = sum(ledger.cordon_node(n) for n in det.faulty)
                     take_r, take_s = sched.cordon(cfree)
@@ -1654,8 +1665,11 @@ def replay_trace(jobs: list[JobRecord], total_gpus: int, *,
                 for n in det.faulty:
                     fleet.faulty.discard(n)
                 if ledger is None:
+                    # same node-less clamp as the narrow-elastic fallback:
+                    # co-located holders keep running, so the drain is
+                    # bounded by the failing job's own released GPUs
                     take_r, take_s = sched.cordon(
-                        cfg.node_gpus * len(det.faulty))
+                        min(job.gpus, cfg.node_gpus * len(det.faulty)))
                 else:
                     # the job's GPUs already returned to its nodes via
                     # stop_running, so the node drain sweeps them up

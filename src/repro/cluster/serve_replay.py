@@ -32,18 +32,40 @@ disaggregation, paged KV with eviction) modeled explicitly:
     prefill/decode ``CostCell``s (``CostModel.serve_rates``): committed
     dry-run artifacts when present, the deterministic analytic fallback
     otherwise, same provenance discipline as the roofline replay.
+  * **Fault injection (§5)** — with a ``failures.FailureInjector``
+    attached, the hardware/infra taxonomy strikes serving instances
+    (preemption excluded: serving *is* the reservation). A failed
+    instance synthesizes a per-class serving log, the ``core/ft``
+    ``DiagnosisLoop`` reads it, and the verdict picks recovery: hardware
+    → cordon the instance's nodes on the ``NodeLedger`` and respawn on
+    free capacity (after REPAIR if the fleet is capacity-tight);
+    transient infra → in-place restart after the class's overhead.
+    In-flight decode residents lose their KV and retry through the
+    prefill fleet (prompt + already-generated tokens, bounded retry
+    budget with exponential backoff, then counted dropped), extending
+    the conservation law to
+    ``evicted_tokens + killed_tokens == recompute_prefill_tokens``.
+    While any instance is down, admission runs in graceful-degradation
+    mode: ``max_batch``/headroom tighten to protect tail latency, the
+    head-of-line skip window widens, and excess queue growth is shed
+    with per-class accounting (``summary()["faults"]``).
 
 The fleet is stood up through a :class:`~repro.cluster.replay.NodeLedger`
 (instances allocate concrete node GPUs), so serving placement shares the
 training replay's physical accounting and the stretch goal of
 co-scheduling both on one ledger stays a config change, not a rewrite.
 
-Determinism contract: no wall clock, no RNG (the trace carries all the
-randomness), flat heap tuples ordered by ``(time, seq)``; the module is
+Determinism contract: no wall clock, no unseeded RNG — the trace carries
+the workload's randomness and the injector/diagnosis draws come from
+their own seeded streams (``seed ^ 0x5EED`` / ``seed ^ 0xD1A6``), so
+failure draws never perturb the trace generator's burst/diurnal/token
+streams; flat heap tuples ordered by ``(time, seq)``; the module is
 on replint's hot list, so every class is slotted. ``summary()`` follows
 the ``ReplayResult.summary()`` schema conventions (see README "Result
 schemas"): stable top-level keys, plain-scalar leaves, memoized and
-deep-copied so repeated calls are side-effect-free.
+deep-copied so repeated calls are side-effect-free. With no injector and
+``hol_skip_window=0`` (the defaults) the engine is bit-exact with the
+pre-fault engine — the committed ``serve_20k`` golden pins it.
 
   >>> from repro.cluster import (ServeReplayConfig, generate_requests,
   ...                            replay_requests)
@@ -62,10 +84,15 @@ from typing import Optional
 
 import numpy as np
 
-from repro.cluster.replay import NodeLedger
+from repro.cluster.failures import SERVE
+from repro.cluster.replay import (VERDICT_HARDWARE, DiagnosisLoop,
+                                  NodeLedger)
 
 # event kinds (flat heap tuples: (t_min, seq, kind, payload, epoch))
 _P_DONE, _D_STEP, _D_EVICT = 0, 1, 2
+# fault-injection kinds: instance failure, instance (re)start, node
+# repair, and a killed request's backoff-delayed prefill retry
+_I_FAIL, _I_UP, _I_REPAIR, _RETRY = 3, 4, 5, 6
 _EPS = 1e-9
 
 
@@ -85,7 +112,23 @@ class ServeReplayConfig:
     is a ``launch.cost_model.CostModel`` (or anything with a
     ``serve_rates(arch, gpus)``); ``None`` loads the committed dry-run
     artifacts with analytic fallback, exactly like the training replay's
-    roofline mode."""
+    roofline mode.
+
+    Fault knobs (all inert at their defaults — the no-injection replay is
+    bit-exact with the pre-fault engine): ``injector`` is a
+    ``failures.FailureInjector`` drawing per-attempt §5 hazards under the
+    ``SERVE`` jtype; ``diagnosis`` an optional pre-built ``DiagnosisLoop``
+    (``None`` builds a serving-flavored one with ``diagnosis_variants``
+    log variants). A killed request retries through prefill up to
+    ``retry_budget`` times with ``retry_backoff_min * 2**(retries-1)``
+    backoff, then counts dropped. ``hol_skip_window`` lets admission scan
+    past a blocked FIFO head (0 = strict FIFO); a head is never skipped
+    more than ``hol_skip_limit`` times (starvation bound). While any
+    instance is down, the effective batch cap shrinks to
+    ``max_batch * degraded_max_batch_frac``, the admission headroom
+    stretches by ``degraded_headroom_mult``, the skip window widens to at
+    least ``degraded_hol_skip``, and arrivals beyond
+    ``degraded_shed_queue`` pending requests are shed (0 disables)."""
     total_gpus: int = 256
     node_gpus: int = 8
     n_prefill: int = 4
@@ -100,6 +143,18 @@ class ServeReplayConfig:
     cost_model: Optional[object] = None
     ttft_slo_s: float = 10.0
     tpot_slo_ms: float = 300.0
+    # -- fault injection + graceful degradation (inert by default) ----------
+    injector: Optional[object] = None
+    diagnosis: Optional[object] = None
+    diagnosis_variants: int = 8
+    retry_budget: int = 3
+    retry_backoff_min: float = 0.25
+    hol_skip_window: int = 0
+    hol_skip_limit: int = 64
+    degraded_max_batch_frac: float = 0.5
+    degraded_headroom_mult: float = 2.0
+    degraded_hol_skip: int = 8
+    degraded_shed_queue: int = 4096
 
 
 class _DecodeInstance:
@@ -114,7 +169,8 @@ class _DecodeInstance:
     keeps token accounting exact under float accumulation — nothing
     drifts because nothing is incrementally summed."""
     __slots__ = ("idx", "b", "vtime", "t0", "rate", "static", "admit_vsum",
-                 "epoch", "ends", "batch", "sched_fv", "occ", "peak_bound")
+                 "epoch", "ends", "batch", "sched_fv", "occ", "peak_bound",
+                 "down")
 
     def __init__(self, idx: int) -> None:
         self.idx = idx
@@ -130,6 +186,28 @@ class _DecodeInstance:
         self.sched_fv = 0.0        # finish_vtime the live D_STEP targets
         self.occ = 0.0             # time-integrated occupancy (batch-min)
         self.peak_bound = 0.0      # max conservative page bound observed
+        self.down = False          # failed and not yet recovered
+
+
+class _FaultClassStats:
+    """Per-failure-class serving impact ledger (``summary()["faults"]``)."""
+    __slots__ = ("failures", "prefill", "decode", "retries", "drops",
+                 "shed", "killed_tokens", "lost_goodput_tokens",
+                 "slo_ttft", "slo_tpot", "downtime_min", "verdicts")
+
+    def __init__(self) -> None:
+        self.failures = 0          # injected incidents of this class
+        self.prefill = 0           # ... that hit a prefill instance
+        self.decode = 0            # ... that hit a decode instance
+        self.retries = 0           # killed requests sent back to prefill
+        self.drops = 0             # retry budget exhausted
+        self.shed = 0              # arrivals shed while this class degraded
+        self.killed_tokens = 0     # KV/work tokens destroyed then recomputed
+        self.lost_goodput_tokens = 0   # prompt+decoded work of drops, wasted
+        self.slo_ttft = 0          # TTFT SLO violations attributed here
+        self.slo_tpot = 0          # TPOT SLO violations attributed here
+        self.downtime_min = 0.0    # summed instance-down wall minutes
+        self.verdicts: dict = {}   # diagnosis verdict -> count
 
 
 @dataclasses.dataclass(slots=True)
@@ -146,7 +224,10 @@ class ServeReplayResult:
     prefill_tokens: int = 0        # all tokens prefilled, recomputes included
     recompute_prefill_tokens: int = 0   # prefill side of eviction recovery
     evictions: int = 0
-    evicted_tokens: int = 0        # KV tokens dropped (== recompute charge)
+    evicted_tokens: int = 0        # KV tokens dropped by paging pressure
+    killed_tokens: int = 0         # KV/work tokens destroyed by failures
+    #   conservation: evicted_tokens + killed_tokens
+    #              == recompute_prefill_tokens
     # -- pressure / occupancy ------------------------------------------------
     occ_time_min: float = 0.0      # sum over instances of integral(batch dt)
     peak_batch: int = 0
@@ -159,6 +240,18 @@ class ServeReplayResult:
     rates_prefill_tok_s: float = 0.0
     rates_decode_fixed_s: float = 0.0
     rates_decode_per_seq_s: float = 0.0
+    # -- fault injection (populated only when config.injector is set) --------
+    faults_injected: int = 0
+    retries_total: int = 0
+    dropped_ids: list = dataclasses.field(default_factory=list)
+    shed_ids: list = dataclasses.field(default_factory=list)
+    hol_skips: int = 0             # head-of-line skips (also sans injector)
+    degraded_min: float = 0.0      # wall minutes with >=1 instance down
+    respawns: int = 0              # hardware-verdict re-allocations
+    inplace_restarts: int = 0      # transient-verdict in-place restarts
+    cordoned_nodes: int = 0
+    fault_stats: Optional[dict] = dataclasses.field(
+        default=None, repr=False)  # class name -> _FaultClassStats
     # memoized summary() tree (same discipline as ReplayResult: built once,
     # deep-copied on every return so callers cannot mutate the memo)
     _summary: Optional[dict] = dataclasses.field(
@@ -168,7 +261,10 @@ class ServeReplayResult:
         """JSON-ready serving scorecard: TTFT/TPOT tails, SLO attainment,
         batch occupancy and KV pressure — the serving analogue of
         ``ReplayResult.summary()`` and bound by the same schema contract
-        (README "Result schemas")."""
+        (README "Result schemas"). With fault injection enabled the tree
+        additionally carries a ``"faults"`` section (the serving-side
+        analogue of ``recovery_stats``); without an injector the tree is
+        unchanged, keeping the no-injection goldens bit-exact."""
         if self._summary is None:
             self._summary = self._build_summary()
         return copy.deepcopy(self._summary)
@@ -204,7 +300,7 @@ class ServeReplayResult:
             tpot_ok = float((tpot_ms <= cfg.tpot_slo_ms).mean()) \
                 if tpot_ms.size else 1.0
             joint = float((ttft_hit & tpot_hit).mean())
-        return {
+        out = {
             "n_requests": n,
             "completed": self.completed,
             "rejected": len(self.rejected_ids),
@@ -261,6 +357,10 @@ class ServeReplayResult:
                     self.rates_decode_per_seq_s * 1e3),
             },
         }
+        if self.fault_stats is not None:
+            from repro.cluster.analysis import serving_fault_stats
+            out["faults"] = serving_fault_stats(self)
+        return out
 
 
 def _tail_s(arr: np.ndarray, qs=(50, 95, 99)) -> dict:
@@ -290,8 +390,8 @@ def replay_requests(requests: list,
 
     ``requests`` are :class:`~repro.cluster.workload.RequestRecord`s; the
     engine writes ``ttft_min`` / ``done_min`` / ``decoded`` / ``evictions``
-    into them (arrival-relative minutes) and returns the result object.
-    The trace need not be pre-sorted."""
+    / ``retries`` into them (arrival-relative minutes) and returns the
+    result object. The trace need not be pre-sorted."""
     cfg = config if config is not None else ServeReplayConfig()
     if cfg.n_prefill < 1 or cfg.n_decode < 1:
         raise ValueError("need at least one prefill and one decode instance")
@@ -301,6 +401,14 @@ def replay_requests(requests: list,
             f"fleet needs {need} GPUs but total_gpus={cfg.total_gpus}")
     if cfg.kv_pages * cfg.page_tokens <= cfg.admit_headroom_tokens:
         raise ValueError("KV capacity below the admission headroom")
+    if cfg.retry_budget < 0 or cfg.retry_backoff_min <= 0.0:
+        raise ValueError("retry_budget must be >= 0 with positive backoff")
+    if cfg.hol_skip_window < 0 or cfg.hol_skip_limit < 1:
+        raise ValueError("hol_skip_window >= 0 and hol_skip_limit >= 1")
+    if not 0.0 < cfg.degraded_max_batch_frac <= 1.0 \
+            or cfg.degraded_headroom_mult < 1.0:
+        raise ValueError("degraded_max_batch_frac in (0, 1] and "
+                         "degraded_headroom_mult >= 1 required")
 
     cm = cfg.cost_model
     if cm is None:
@@ -314,8 +422,10 @@ def replay_requests(requests: list,
     # node-local placement: every instance allocates concrete node GPUs
     n_nodes = max(cfg.total_gpus // cfg.node_gpus, 1)
     ledger = NodeLedger(n_nodes, cfg.node_gpus, cfg.total_gpus)
-    placements = [ledger.alloc(cfg.gpus_per_instance)
-                  for _ in range(cfg.n_prefill + cfg.n_decode)]
+    n_prefill = cfg.n_prefill
+    gpi = cfg.gpus_per_instance
+    placements = [ledger.alloc(gpi)
+                  for _ in range(n_prefill + cfg.n_decode)]
     nodes_used = len({node for pl in placements for node in pl if node >= 0})
 
     res = ServeReplayResult(requests=requests, config=cfg,
@@ -327,7 +437,6 @@ def replay_requests(requests: list,
 
     page = cfg.page_tokens
     cap_pages = cfg.kv_pages
-    cap_tokens = cap_pages * page
     max_batch = cfg.max_batch
     admit_headroom = cfg.admit_headroom_tokens
     evict_headroom = cfg.evict_headroom_tokens
@@ -336,8 +445,9 @@ def replay_requests(requests: list,
     max_resident = (cap_pages - 1) * page - admit_headroom
 
     insts = [_DecodeInstance(i) for i in range(cfg.n_decode)]
+    up_insts = insts            # admission candidates (rebuilt on fail/up)
     # prefill fleet: FIFO k-server queue as a (free_at, idx) heap
-    pf = [(0.0, i) for i in range(cfg.n_prefill)]
+    pf = [(0.0, i) for i in range(n_prefill)]
     heapq.heapify(pf)
 
     events: list = []
@@ -363,18 +473,69 @@ def replay_requests(requests: list,
     admit_wait_n = 0
     peak_batch = 0
     events_processed = 0
+    hol_skips = 0
+
+    # -- fault-injection state (all inert when no injector is attached) -----
+    inj = cfg.injector
+    injecting = inj is not None
+    dloop = cfg.diagnosis
+    if injecting and dloop is None:
+        dloop = DiagnosisLoop(n_variants=cfg.diagnosis_variants,
+                              flavor="serve")
+    stats: dict = {}            # class name -> _FaultClassStats
+    killed_tokens = 0
+    retries_total = 0
+    faults_injected = 0
+    respawns = 0
+    inplace_restarts = 0
+    cordoned_nodes = 0
+    degraded_min = 0.0
+    degraded_since = 0.0
+    # (is_decode, idx) -> (class name, down-since minute); insertion order
+    # makes the *oldest* outstanding failure the degradation episode's
+    # attribution cause
+    active_faults: dict = {}
+    # per prefill instance: authoritative free_at (a failed instance's heap
+    # entry goes stale by mismatch), and the in-flight passes it would lose
+    pf_free = [0.0] * n_prefill
+    pf_sched: list = [dict() for _ in range(n_prefill)]
+    pf_blocked: deque = deque()     # passes waiting for any prefill instance
+    placement_dead = [False] * len(placements)  # hardware-killed allocation
+    pending_repairs: list = []      # outstanding _I_REPAIR fire times
+    retry_budget = cfg.retry_budget
+    retry_backoff = cfg.retry_backoff_min
+    shed_queue = cfg.degraded_shed_queue
+    hol_skip_limit = cfg.hol_skip_limit
+    # effective (possibly degraded) admission knobs
+    eff_max_batch = max_batch
+    eff_headroom = admit_headroom
+    eff_skip = cfg.hol_skip_window
+    inject_until = arrivals[-1].arrival_min if arrivals else 0.0
 
     def start_prefill(req, now: float, tokens: int, recompute: bool) -> None:
         nonlocal seq, prefill_tokens, recompute_prefill_tokens
-        free_at, i = heappop(pf)
+        while True:
+            if not pf:
+                # every prefill instance is down: park the pass; _I_UP
+                # re-dispatches the queue in FIFO order
+                pf_blocked.append((req, tokens, recompute))
+                return
+            free_at, i = heappop(pf)
+            if injecting and pf_free[i] != free_at:
+                continue        # stale entry (instance failed or re-keyed)
+            break
         start = free_at if free_at > now else now
         done = start + tokens * prefill_min_per_tok
         heappush(pf, (done, i))
         seq += 1
-        heappush(events, (done, seq, _P_DONE, req, 0))
+        heappush(events, (done, seq, _P_DONE, req, req._pfe))
         prefill_tokens += tokens
         if recompute:
             recompute_prefill_tokens += tokens
+        if injecting:
+            pf_free[i] = done
+            pf_sched[i][req.req_id] = req
+            req._pfi = i
 
     def advance(inst, now: float) -> None:
         dt = now - inst.t0
@@ -414,14 +575,38 @@ def replay_requests(requests: list,
             inst.sched_fv = ends[0][0]
             heappush(events, (t_done, seq, _D_STEP, inst.idx, inst.epoch))
 
-    def admit(now: float) -> None:
+    def do_admit(inst, req, ready: float, now: float) -> None:
+        """Book one admission onto ``inst`` (caller removed it from
+        ``pending``); identical arithmetic to the pre-fault inline path."""
         nonlocal seq, admit_wait_sum, admit_wait_n, peak_batch
+        admit_wait_sum += now - ready
+        admit_wait_n += 1
+        advance(inst, now)
+        req._res += 1
+        req._inst = inst.idx
+        req._admit_v = inst.vtime
+        req._base = req.prompt_tokens + req.decoded
+        inst.static += req._base
+        inst.admit_vsum += inst.vtime
+        inst.batch[req.req_id] = req
+        inst.b += 1
+        if inst.b > peak_batch:
+            peak_batch = inst.b
+        rem = req.out_tokens - 1 - req.decoded
+        seq += 1
+        heappush(inst.ends, (inst.vtime + rem, seq, req, req._res))
+        inst.rate = 60.0 / (fixed_s + inst.b * per_seq_s)
+        inst.epoch += 1
+        reschedule(inst, now)
+
+    def admit(now: float) -> None:
+        nonlocal hol_skips
         while pending:
             ready, req = pending[0]
             base = req.prompt_tokens + req.decoded
             best = None
-            best_b = max_batch
-            for inst in insts:
+            best_b = eff_max_batch
+            for inst in up_insts:
                 b = inst.b
                 if b >= best_b:
                     continue
@@ -430,32 +615,61 @@ def replay_requests(requests: list,
                         + b * (inst.vtime + (now - inst.t0) * inst.rate)
                         - inst.admit_vsum)
                 if toks + base <= (cap_pages - b - 1) * page \
-                        - admit_headroom:
+                        - eff_headroom:
                     best = inst
                     best_b = b
-            if best is None:
-                return      # FIFO head blocked; retry at the next event
-            pending.popleft()
-            admit_wait_sum += now - ready
-            admit_wait_n += 1
-            inst = best
-            advance(inst, now)
-            req._res += 1
-            req._inst = inst.idx
-            req._admit_v = inst.vtime
-            req._base = base
-            inst.static += base
-            inst.admit_vsum += inst.vtime
-            inst.batch[req.req_id] = req
-            inst.b += 1
-            if inst.b > peak_batch:
-                peak_batch = inst.b
-            rem = req.out_tokens - 1 - req.decoded
-            seq += 1
-            heappush(inst.ends, (inst.vtime + rem, seq, req, req._res))
-            inst.rate = 60.0 / (fixed_s + inst.b * per_seq_s)
-            inst.epoch += 1
-            reschedule(inst, now)
+            if best is not None:
+                pending.popleft()
+                do_admit(best, req, ready, now)
+                continue
+            # FIFO head blocked: optionally scan a bounded window of the
+            # queue for a smaller admissible request (head-of-line skip);
+            # the per-head skip cap bounds starvation — after
+            # ``hol_skip_limit`` skips the queue is strict FIFO again
+            # until the head itself admits
+            if not eff_skip or req._skips >= hol_skip_limit:
+                return
+            # precompute each instance's admission room at `now` — it is
+            # candidate-invariant, so the window scan is O(window + insts)
+            # rather than O(window * insts), and a queue blocked by sheer
+            # KV fullness exits after the single room pass
+            cands = []
+            max_room = -1.0
+            for inst in up_insts:
+                b = inst.b
+                if b >= eff_max_batch:
+                    continue
+                toks = (inst.static
+                        + b * (inst.vtime + (now - inst.t0) * inst.rate)
+                        - inst.admit_vsum)
+                room = (cap_pages - b - 1) * page - eff_headroom - toks
+                cands.append((b, len(cands), room, inst))
+                if room > max_room:
+                    max_room = room
+            if max_room < 1.0:      # nothing fits even a 1-token request
+                return
+            cands.sort()            # lowest occupancy first (stable order)
+            admitted = False
+            limit = len(pending) - 1
+            if limit > eff_skip:
+                limit = eff_skip
+            for k in range(1, limit + 1):
+                ready2, req2 = pending[k]
+                base2 = req2.prompt_tokens + req2.decoded
+                if base2 > max_room:
+                    continue
+                for _b, _o, room, cand in cands:
+                    if base2 <= room:
+                        del pending[k]
+                        req._skips += 1
+                        hol_skips += 1
+                        do_admit(cand, req2, ready2, now)
+                        admitted = True
+                        break
+                if admitted:
+                    break
+            if not admitted:
+                return
 
     def remove(inst, req) -> None:
         """Drop a resident from the closed-form KV accounting."""
@@ -471,6 +685,239 @@ def replay_requests(requests: list,
         req.decoded = req.out_tokens - 1
         req.done_min = now - req.arrival_min
         completed += 1
+        if injecting:
+            # SLO-violation attribution: a request a failure touched blames
+            # that class; an untouched request finishing during a degraded
+            # episode blames the episode's (oldest outstanding) cause
+            cls_name = req._fcls
+            if cls_name is None and active_faults:
+                cls_name = next(iter(active_faults.values()))[0]
+            if cls_name is not None:
+                fs = stats.get(cls_name)
+                if fs is None:
+                    fs = stats[cls_name] = _FaultClassStats()
+                if req.ttft_min * 60.0 > cfg.ttft_slo_s:
+                    fs.slo_ttft += 1
+                if req.out_tokens > 1 \
+                        and ((req.done_min - req.ttft_min)
+                             / (req.out_tokens - 1) * 60_000.0
+                             > cfg.tpot_slo_ms):
+                    fs.slo_tpot += 1
+
+    # -- fault-injection helpers (never called without an injector) ---------
+
+    def class_stats(name: str) -> _FaultClassStats:
+        fs = stats.get(name)
+        if fs is None:
+            fs = stats[name] = _FaultClassStats()
+        return fs
+
+    def set_degraded(on: bool) -> None:
+        nonlocal eff_max_batch, eff_headroom, eff_skip
+        if on:
+            eff_max_batch = max(1, int(max_batch
+                                       * cfg.degraded_max_batch_frac))
+            eff_headroom = int(admit_headroom * cfg.degraded_headroom_mult)
+            eff_skip = max(cfg.hol_skip_window, cfg.degraded_hol_skip)
+        else:
+            eff_max_batch = max_batch
+            eff_headroom = admit_headroom
+            eff_skip = cfg.hol_skip_window
+
+    def schedule_fail(is_decode: int, idx: int, now: float) -> None:
+        """Draw the §5 hazard for one fresh instance attempt."""
+        nonlocal seq
+        remaining = inject_until - now
+        if remaining <= 0.0:
+            return
+        hit = inj.draw(SERVE, gpi, remaining)
+        if hit is None:
+            return
+        ttf, cls = hit
+        seq += 1
+        heappush(events, (now + ttf, seq, _I_FAIL, (is_decode, idx, cls), 0))
+
+    def kill_request(req, cls, now: float) -> None:
+        """One request's KV/work was destroyed by ``cls``: retry through
+        the prefill fleet with exponential backoff, or count it dropped
+        once the budget is spent. ``killed_tokens`` is charged only for
+        retried work — the recompute pass balances it exactly, keeping
+        ``evicted + killed == recomputed`` an identity."""
+        nonlocal seq, killed_tokens, retries_total
+        fs = class_stats(cls.name)
+        req._fcls = cls.name
+        if req.retries >= retry_budget:
+            res.dropped_ids.append(req.req_id)
+            fs.drops += 1
+            fs.lost_goodput_tokens += req.prompt_tokens + req.decoded
+            return
+        req.retries += 1
+        retries_total += 1
+        fs.retries += 1
+        lost = req.prompt_tokens + req.decoded
+        killed_tokens += lost
+        fs.killed_tokens += lost
+        delay = retry_backoff * (2.0 ** (req.retries - 1))
+        seq += 1
+        heappush(events, (now + delay, seq, _RETRY, req, 0))
+
+    def next_respawn_wait(now: float) -> float:
+        """When a hardware respawn finds no free capacity it re-arms at
+        the earliest outstanding REPAIR (capacity returns there); a short
+        poll is the fallback if none is pending."""
+        best = math.inf
+        for t in pending_repairs:
+            if now < t < best:
+                best = t
+        return best if math.isfinite(best) else now + 5.0
+
+    def on_instance_fail(payload, now: float) -> None:
+        nonlocal seq, faults_injected, decoded_tokens, respawns, \
+            inplace_restarts, cordoned_nodes, degraded_since, up_insts
+        is_dec, idx, cls = payload
+        fs = class_stats(cls.name)
+        faults_injected += 1
+        fs.failures += 1
+        if is_dec:
+            fs.decode += 1
+        else:
+            fs.prefill += 1
+        # -- diagnosis-in-the-loop: a serving-flavored per-class log runs
+        # through the §6.1 pipeline; the verdict picks the recovery
+        if dloop is not None:
+            vclass, _, _ = dloop.verdict(cls)
+            fs.verdicts[vclass] = fs.verdicts.get(vclass, 0) + 1
+            hardware = vclass == VERDICT_HARDWARE
+        else:
+            hardware = cls.needs_cordon
+        # -- teardown: resident KV / in-flight prefill work is destroyed --
+        if is_dec:
+            inst = insts[idx]
+            advance(inst, now)
+            v = inst.vtime
+            for req in list(inst.batch.values()):
+                prog = int(v - req._admit_v)
+                if prog < 0:
+                    prog = 0
+                dec = req.decoded + prog
+                if dec > req.out_tokens - 1:
+                    dec = req.out_tokens - 1
+                decoded_tokens += dec - req.decoded
+                req.decoded = dec
+                req._res += 1       # lazy-delete any completion-heap entry
+                req._inst = -1
+                if dec >= req.out_tokens - 1:
+                    # fully decoded at the kill instant: tokens already
+                    # streamed out, nothing to rebuild
+                    finish(req, now)
+                else:
+                    kill_request(req, cls, now)
+            inst.batch.clear()
+            inst.ends.clear()
+            inst.b = 0
+            inst.static = 0.0
+            inst.admit_vsum = 0.0
+            inst.vtime = 0.0
+            inst.sched_fv = 0.0
+            inst.rate = 0.0
+            inst.t0 = now
+            inst.epoch += 1         # voids scheduled _D_STEP/_D_EVICT
+            inst.down = True
+            up_insts = [i for i in insts if not i.down]
+        else:
+            pf_free[idx] = -1.0     # stale-key every live heap entry
+            affected = list(pf_sched[idx].values())
+            pf_sched[idx].clear()
+            for req in affected:
+                req._pfe += 1       # voids its scheduled _P_DONE
+                req._pfi = -1
+                kill_request(req, cls, now)
+        # -- recovery: verdict-driven, mirroring the training replay ------
+        pidx = n_prefill + idx if is_dec else idx
+        if hardware:
+            # release-then-cordon, the training replay's ordering: the dead
+            # instance's GPUs rejoin their nodes' free pools, and the node
+            # drain sweeps them (plus any bystander free GPUs) into the
+            # cordon; everything returns together at REPAIR via add_free
+            nodes = tuple(n for n in placements[pidx] if n >= 0)
+            ledger.release(placements[pidx])
+            cfree = 0
+            for n in nodes:
+                cfree += ledger.cordon_node(n)
+            cordoned_nodes += len(nodes)
+            placement_dead[pidx] = True
+            t_repair = now + max(cls.repair_min, _EPS)
+            pending_repairs.append(t_repair)
+            seq += 1
+            heappush(events, (t_repair, seq, _I_REPAIR,
+                              (nodes, cfree, t_repair), 0))
+        seq += 1
+        heappush(events, (now + cls.restart_overhead_min, seq, _I_UP,
+                          (is_dec, idx), 0))
+        # -- graceful degradation bookkeeping -----------------------------
+        if not active_faults:
+            degraded_since = now
+            set_degraded(True)
+        active_faults[(is_dec, idx)] = (cls.name, now)
+
+    def on_instance_up(payload, now: float) -> None:
+        nonlocal seq, respawns, inplace_restarts, degraded_min, up_insts
+        is_dec, idx = payload
+        pidx = n_prefill + idx if is_dec else idx
+        if placement_dead[pidx]:
+            # hardware verdict: the old allocation died with its cordoned
+            # nodes — respawn needs fresh capacity, else wait for REPAIR
+            if ledger.free_total() < gpi:
+                seq += 1
+                heappush(events, (next_respawn_wait(now), seq, _I_UP,
+                                  (is_dec, idx), 0))
+                return
+            placements[pidx] = ledger.alloc(gpi)
+            placement_dead[pidx] = False
+            respawns += 1
+        else:
+            inplace_restarts += 1
+        entry = active_faults.pop((is_dec, idx), None)
+        if entry is not None:
+            class_stats(entry[0]).downtime_min += now - entry[1]
+        if not active_faults:
+            degraded_min += now - degraded_since
+            set_degraded(False)
+        if is_dec:
+            inst = insts[idx]
+            inst.down = False
+            inst.t0 = now
+            up_insts = [i for i in insts if not i.down]
+        else:
+            pf_free[idx] = now
+            heappush(pf, (now, idx))
+            while pf_blocked and pf:
+                req, tokens, recompute = pf_blocked.popleft()
+                start_prefill(req, now, tokens, recompute)
+        schedule_fail(is_dec, idx, now)     # fresh attempt, fresh hazard
+        admit(now)
+
+    def on_repair(payload, now: float) -> None:
+        nodes, cfree, t_repair = payload
+        try:
+            pending_repairs.remove(t_repair)
+        except ValueError:
+            pass
+        ledger.repair_nodes(nodes)
+        # the drained cordon share — dead instance's GPUs included, since
+        # release preceded the cordon — returns to the free pools
+        if cfree:
+            ledger.add_free(cfree, prefer=nodes)
+        admit(now)
+
+    # draw each instance's initial attempt hazard (fixed order: prefill
+    # 0..P-1 then decode 0..D-1 — the injector stream is positional)
+    if injecting:
+        res.fault_stats = stats
+        for i in range(n_prefill):
+            schedule_fail(0, i, 0.0)
+        for j in range(cfg.n_decode):
+            schedule_fail(1, j, 0.0)
 
     arr_i = 0
     while arr_i < n_arr or events:
@@ -480,6 +927,13 @@ def replay_requests(requests: list,
             events_processed += 1
             if kind == _P_DONE:
                 req = payload
+                if injecting:
+                    if epoch != req._pfe:
+                        stale += 1
+                        continue
+                    if req._pfi >= 0:
+                        pf_sched[req._pfi].pop(req.req_id, None)
+                        req._pfi = -1
                 if math.isinf(req.ttft_min):
                     req.ttft_min = now - req.arrival_min
                     if req.out_tokens <= 1:
@@ -512,7 +966,7 @@ def replay_requests(requests: list,
                 inst.epoch += 1
                 reschedule(inst, now)
                 admit(now)
-            else:   # _D_EVICT
+            elif kind == _D_EVICT:
                 inst = insts[payload]
                 if epoch != inst.epoch:
                     stale += 1
@@ -549,6 +1003,19 @@ def replay_requests(requests: list,
                 inst.epoch += 1
                 reschedule(inst, now)
                 admit(now)
+            elif kind == _I_FAIL:
+                on_instance_fail(payload, now)
+                continue    # fault machinery never advances the service
+            elif kind == _I_UP:     # horizon (a +24h REPAIR tail must not
+                on_instance_up(payload, now)    # dilute throughput rates)
+                continue
+            elif kind == _I_REPAIR:
+                on_repair(payload, now)
+                continue
+            else:   # _RETRY: backoff elapsed, re-enter the prefill fleet
+                req = payload
+                start_prefill(req, now, req.prompt_tokens + req.decoded,
+                              True)
         else:
             req = arrivals[arr_i]
             arr_i += 1
@@ -557,10 +1024,32 @@ def replay_requests(requests: list,
             if req.prompt_tokens + req.out_tokens - 1 > max_resident:
                 res.rejected_ids.append(req.req_id)
                 continue
+            if injecting and active_faults and shed_queue \
+                    and len(pending) >= shed_queue:
+                # graceful degradation: beyond the queue cap, arriving
+                # load is shed outright and attributed to the episode
+                res.shed_ids.append(req.req_id)
+                cls_name = next(iter(active_faults.values()))[0]
+                class_stats(cls_name).shed += 1
+                continue
             start_prefill(req, now, req.prompt_tokens, False)
         if now > res.horizon_min:
             res.horizon_min = now
 
+    if injecting:
+        # close still-open degradation episodes at the final horizon
+        now = res.horizon_min
+        for (key, (cls_name, t0)) in list(active_faults.items()):
+            class_stats(cls_name).downtime_min += now - t0
+        if active_faults:
+            degraded_min += now - degraded_since
+        res.faults_injected = faults_injected
+        res.killed_tokens = killed_tokens
+        res.retries_total = retries_total
+        res.degraded_min = degraded_min
+        res.respawns = respawns
+        res.inplace_restarts = inplace_restarts
+        res.cordoned_nodes = cordoned_nodes
     res.events_processed = events_processed
     res.completed = completed
     res.decoded_tokens = decoded_tokens
@@ -572,6 +1061,7 @@ def replay_requests(requests: list,
     res.admit_wait_sum_min = admit_wait_sum
     res.admit_wait_n = admit_wait_n
     res.peak_batch = peak_batch
+    res.hol_skips = hol_skips
     res.occ_time_min = math.fsum(i.occ for i in insts)
     res.kv_peak_pages = max((i.peak_bound for i in insts), default=0.0)
     return res

@@ -172,6 +172,7 @@ class RequestRecord:
     done_min: float = math.inf   # arrival-relative completion; inf = rejected
     decoded: int = 0             # decode tokens produced so far (<= out-1)
     evictions: int = 0           # KV evictions this request suffered
+    retries: int = 0             # failure-kill retries through prefill
     # -- engine-transient state (repro.cluster.serve_replay) ----------------
     # Slot-declared for the same reason as JobRecord's transient fields:
     # the decode loop touches them per membership event at 1M+ request
@@ -185,6 +186,19 @@ class RequestRecord:
         init=False, repr=False, compare=False, default=0.0)
     _base: int = dataclasses.field(
         init=False, repr=False, compare=False, default=0)
+    # fault-injection transients: ``_pfe`` versions the request's in-flight
+    # prefill pass (a failed prefill server lazily voids its _P_DONE),
+    # ``_pfi`` names the prefill instance serving it, ``_skips`` bounds
+    # head-of-line skip starvation, ``_fcls`` remembers the failure class
+    # that last killed/retried it (SLO-violation attribution).
+    _pfe: int = dataclasses.field(
+        init=False, repr=False, compare=False, default=0)
+    _pfi: int = dataclasses.field(
+        init=False, repr=False, compare=False, default=-1)
+    _skips: int = dataclasses.field(
+        init=False, repr=False, compare=False, default=0)
+    _fcls: object = dataclasses.field(
+        init=False, repr=False, compare=False, default=None)
 
 
 def generate_requests(n_requests: int, *, seed: int = 0,

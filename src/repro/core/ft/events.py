@@ -183,6 +183,27 @@ _INIT_LINES = (
     "INFO [ckpt] resuming from step 41200 (s3://ckpt-bucket/run-17/)",
 )
 
+# serving-flavored spam for the serving replay's injected incidents: same
+# format keys as the trainer lines (the generate_log loop passes one kwarg
+# set either way, so both flavors consume the RNG identically), but shaped
+# like an inference engine's heartbeat — batch occupancy, TTFT, KV paging,
+# admission — so the diagnosis pipeline sees a serving log, not a trainer's.
+_SERVE_NORMAL_LINES = (
+    "INFO [serve] step={step} batch_occupancy={gn:.3f} decode_tps={tgs:.1f}",
+    "INFO [serve] step={step} kv_pages_resident={tok} prefill_tflops={tf:.1f}",
+    "DEBUG [kv] step={step} allocated={mem:.1f}GB paged={mem2:.1f}GB",
+    "INFO [admit] ttft_p50={ms:.1f}ms queue_lambda={loss:.4f}",
+    "INFO [route] request shard {shard} admitted to decode instance",
+)
+
+_SERVE_INIT_LINES = (
+    "INFO [serve] disaggregated fleet up: prefill=4 decode=16 gpus/inst=8",
+    "INFO [serve] NCCL version 2.18.3+cuda12.1",
+    "INFO [model] InternLM 7B serving: layers=32 hidden=4096 heads=32",
+    "INFO [kv] paged KV cache: page=16 tokens, 4096 pages/instance",
+    "INFO [serve] continuous batching enabled: max_batch=64",
+)
+
 
 def fill_template(template: str, rng: random.Random) -> str:
     """Randomize a log template's ``{d}``/``{w}`` slots."""
@@ -199,18 +220,24 @@ _fill = fill_template
 
 def generate_log(failure: Optional[FailureType], *, seed: int = 0,
                  n_normal: int = 400, start_step: int = 41200,
-                 cascade: bool = True) -> list[str]:
+                 cascade: bool = True, flavor: str = "train") -> list[str]:
     """Synthesize a runtime log: init banner + metric spam [+ failure tail].
 
     With ``cascade=True`` the root cause is buried among secondary symptom
     errors and repeated watchdog spam, mimicking real multi-error logs.
+    ``flavor="serve"`` swaps the trainer banner/heartbeat for an inference
+    engine's (same failure-tail templates — the §5 hazards are identical);
+    both flavors consume the RNG identically, so a given seed yields the
+    same root cause and tail ordering either way.
     """
     rng = random.Random(seed)
-    lines = list(_INIT_LINES)
+    init, normal = ((_SERVE_INIT_LINES, _SERVE_NORMAL_LINES)
+                    if flavor == "serve" else (_INIT_LINES, _NORMAL_LINES))
+    lines = list(init)
     loss = 2.31
     for i in range(n_normal):
         loss = max(1.2, loss - rng.random() * 1e-3)
-        t = rng.choice(_NORMAL_LINES)
+        t = rng.choice(normal)
         lines.append(t.format(step=start_step + i, loss=loss,
                               lr=2.4e-5, gn=rng.random() * 2,
                               tgs=3900 + rng.random() * 200,

@@ -65,6 +65,7 @@ class ServeSession:
                                        shard_model_axes=model_axis > 1)
         self.model = Model(self.cfg, self.parallel,
                            make_rules(self.mesh, self.parallel))
+        self._seed = seed
         self.params = self.model.init(jax.random.PRNGKey(seed))
         self._prefill_fn = jax.jit(self.model.prefill)
         self._step_fn = jax.jit(make_serve_step(self.model))
@@ -136,6 +137,24 @@ class ServeSession:
         gen, td = self.decode_step(n_tokens)
         return gen, tp, td
 
+    def restart(self) -> ServeTimings:
+        """In-place restart: the recovery primitive the serving replay's
+        transient-infra verdict models (``cluster/serve_replay.py``). All
+        session state an instance failure would destroy — KV caches, the
+        pending greedy token, the position cursor — is dropped and the
+        parameters are re-initialized from the session seed; resident
+        requests must re-enter through :meth:`prefill` (the replay's
+        recompute pass). Returns the restart's wall-clock timings so
+        dry-runs can calibrate the taxonomy's ``restart_overhead_min``."""
+        self._caches = None
+        self._tok = None
+        self._pos = 0
+        t0 = time.time()
+        self.params = self.model.init(jax.random.PRNGKey(self._seed))
+        jax.block_until_ready(self.params)
+        dt = time.time() - t0
+        return ServeTimings("restart", dt, 0, 0)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -145,15 +164,25 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--restarts", type=int, default=0,
+                    help="in-place restarts between generations (exercises "
+                         "the fault-recovery primitive the serving replay "
+                         "models for transient-infra verdicts)")
     args = ap.parse_args()
 
     sess = ServeSession(args.arch, smoke=args.smoke,
                         model_axis=args.model_axis)
-    gen, tp, td = sess.generate(sess.make_batch(args.batch, args.prompt_len),
-                                args.gen)
-    logger.info("prefill %.2fs; decode %d x %d tokens in %.2fs "
-                "(%.1f tok/s incl. first-step compile)",
-                tp.seconds, td.batch, args.gen, td.seconds, td.tokens_per_s)
+    for i in range(args.restarts + 1):
+        gen, tp, td = sess.generate(
+            sess.make_batch(args.batch, args.prompt_len), args.gen)
+        logger.info("prefill %.2fs; decode %d x %d tokens in %.2fs "
+                    "(%.1f tok/s incl. first-step compile)",
+                    tp.seconds, td.batch, args.gen, td.seconds,
+                    td.tokens_per_s)
+        if i < args.restarts:
+            tr = sess.restart()
+            logger.info("in-place restart %d/%d: %.2fs (KV + session state "
+                        "dropped)", i + 1, args.restarts, tr.seconds)
     logger.info("sample generation: %s", np.asarray(gen[0][:16]))
 
 

@@ -32,6 +32,7 @@ def _write_all(dirp, scale=1.0, fingerprint=1234.0):
     # gated probe is hermetic, so no fingerprint row is needed here
     _write(dirp, "serve", {"events_per_calib": 1.5 * scale,
                            "events_per_calib_serve": 1.5 * scale,
+                           "events_per_calib_serve_faults": 1.2 * scale,
                            "slo_joint_attainment": 0.8,
                            "decoded_tok_per_s": 2300.0})
     _write(dirp, "detection", {"n128_probe_savings": 120.0 * scale,

@@ -109,12 +109,33 @@ def _serve_summary() -> dict:
     return replay_requests(reqs, cfg).summary()
 
 
+def _serve_faults_summary() -> dict:
+    """Fault-tolerant serving: the same 20k trace with the §5 taxonomy
+    striking the fleet through fixed injector/diagnosis seeds — pins the
+    whole recovery pipeline (verdict routing, cordon/respawn vs in-place
+    restart, bounded retries, degradation windows, shed accounting) plus
+    the ``summary()["faults"]`` attribution tree. The no-injection
+    ``serve_20k`` fixture staying untouched is the bit-exactness
+    guarantee for the fault machinery's inert path."""
+    from repro.cluster import (SERVING_TAXONOMY, DiagnosisLoop,
+                               FailureInjector, ServeReplayConfig,
+                               generate_requests, replay_requests)
+    from repro.launch.cost_model import CostModel
+    reqs = generate_requests(20_000, seed=0, horizon_min=30.0)
+    cfg = ServeReplayConfig(
+        cost_model=CostModel.analytic(("internlm-7b",)),
+        injector=FailureInjector(SERVING_TAXONOMY, seed=7, rate_scale=500.0),
+        diagnosis=DiagnosisLoop(n_variants=4, flavor="serve"))
+    return replay_requests(reqs, cfg).summary()
+
+
 CASES = {
     "full_feature_50k": _full_feature_summary,
     "easy_pool_20k": _easy_pool_summary,
     "noinject_greedy_50k": _noinject_summary,
     "roofline_20k": _roofline_summary,
     "serve_20k": _serve_summary,
+    "serve_faults_20k": _serve_faults_summary,
 }
 
 

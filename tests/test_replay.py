@@ -182,6 +182,39 @@ def test_cordon_shrinks_then_repair_restores_capacity():
     assert full.queue_min == pytest.approx(start_full - 60.0)
 
 
+def test_cordon_drain_spares_colocated_jobs():
+    """Node-less cordon drain is clamped to the failing job's own GPUs:
+    the rest of the node is held by co-located jobs that keep running to
+    their own completion, so draining the nominal node width would
+    double-count their GPUs and starve later arrivals. Pins the
+    co-located job's undisturbed end time AND the clamped free pool via a
+    later job's queueing delay (an over-drain of the full 8-GPU node
+    width would push its start past the co-located job's completion)."""
+    cls = ReplayFailureClass(HARDWARE, 1.0, {}, needs_cordon=True,
+                             restart_overhead_min=5.0, repair_min=500.0)
+    fail = JobRecord(0, "pretrain", 2, 0.0, 100.0, "completed")
+    colo = JobRecord(1, "pretrain", 6, 0.0, 50.0, "completed")
+    late = JobRecord(2, "pretrain", 8, 20.0, 10.0, "completed")
+    inj = ScriptedInjector([(10.0, cls), None, None])
+    res = replay_trace([fail, colo, late], 16, reserved_frac=0.5,
+                       config=ReplayConfig(injector=inj, node_gpus=8,
+                                           max_cordon_frac=0.5,
+                                           record_segments=True))
+    assert res.cordon_events == 1
+    assert fail.restarts == 1
+    # the co-located job never noticed the neighbor's node fault
+    assert colo.restarts == 0
+    colo_end = next(s[3] for s in res.segments
+                    if s[0] == 1 and s[4] == "finish")
+    assert colo_end == pytest.approx(50.0)
+    # drain clamped to the failing job's 2 GPUs: free capacity after the
+    # cordon is 16 - 6 (colo) - 2 (drained) - 2 (fail's restart) = 6, so
+    # the late 8-GPU job starts the moment colo's GPUs return at t = 50
+    late_start = next(s[2] for s in res.segments if s[0] == 2)
+    assert late_start == pytest.approx(50.0)
+    assert late.queue_min == pytest.approx(30.0)
+
+
 def test_preemption_never_hits_reserved_types():
     pre = next(c for c in DEFAULT_TAXONOMY if c.name == PREEMPTION)
     assert pre.rate_for("pretrain") == 0.0

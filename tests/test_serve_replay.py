@@ -1,7 +1,9 @@
 """Serving replay: determinism, admission/KV conservation, eviction
-accounting. The conservation laws here are the engine's ground truth —
-every decode token is produced exactly once, every evicted KV token is
-recomputed through the prefill fleet, and the conservative page bound
+accounting, and fault-tolerant serving (§5 taxonomy injection). The
+conservation laws here are the engine's ground truth — every decode token
+is produced exactly once, every evicted *or failure-killed* KV token is
+recomputed through the prefill fleet
+(``evicted + killed == recomputed``), and the conservative page bound
 never exceeds capacity."""
 import json
 import math
@@ -10,8 +12,10 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.cluster import (ServeReplayConfig, generate_requests,
+from repro.cluster import (SERVING_TAXONOMY, FailureInjector,
+                           ServeReplayConfig, generate_requests,
                            replay_requests)
+from repro.core.ft.diagnosis import VERDICT_HARDWARE, VERDICT_TRANSIENT
 from repro.launch.cost_model import ServeRates
 
 
@@ -24,29 +28,56 @@ class _StubCostModel:
                           source="stub/stub")
 
 
+class _StubDiagnosis:
+    """Duck-typed DiagnosisLoop: ground-truth verdicts, no pipeline cost."""
+
+    def verdict(self, cls):
+        v = VERDICT_HARDWARE if cls.needs_cordon else VERDICT_TRANSIENT
+        return v, None, None
+
+
 def _cfg(**kw):
     kw.setdefault("cost_model", _StubCostModel())
+    if kw.get("injector") is not None:
+        kw.setdefault("diagnosis", _StubDiagnosis())
     return ServeReplayConfig(**kw)
 
 
 def _check_conservation(reqs, res, cfg):
-    """The invariants every serving replay must satisfy, any config."""
+    """The invariants every serving replay must satisfy, any config —
+    fault injection included (the no-fault run is the special case with
+    empty dropped/shed sets and ``killed_tokens == 0``)."""
     rejected = set(res.rejected_ids)
-    finished = [r for r in reqs if r.req_id not in rejected]
-    # every admitted request runs to completion
+    dropped = set(res.dropped_ids)
+    shed = set(res.shed_ids)
+    gone = rejected | dropped | shed
+    assert len(gone) == len(rejected) + len(dropped) + len(shed)
+    finished = [r for r in reqs if r.req_id not in gone]
+    # every request is finished, rejected, dropped, or shed — nothing lost
     assert res.completed == len(finished)
     for r in finished:
         assert math.isfinite(r.done_min) and math.isfinite(r.ttft_min)
         assert 0.0 <= r.ttft_min <= r.done_min + 1e-9
         assert r.decoded == r.out_tokens - 1
     for r in reqs:
-        if r.req_id in rejected:
+        if r.req_id in gone:
             assert not math.isfinite(r.done_min)
-    # token conservation: decode side produces each token exactly once...
-    assert res.decoded_tokens == sum(r.out_tokens - 1 for r in finished)
-    # ...and every evicted KV token is recomputed through the prefill fleet
-    assert res.evicted_tokens == res.recompute_prefill_tokens
-    assert res.prefill_tokens == (sum(r.prompt_tokens for r in finished)
+        if r.req_id in dropped:
+            # only a spent retry budget may drop a request
+            assert r.retries == cfg.retry_budget
+        assert r.retries <= cfg.retry_budget
+    # token conservation: decode side produces each token exactly once
+    # (dropped requests keep the partial progress they streamed out)...
+    assert res.decoded_tokens == sum(r.decoded for r in reqs)
+    # ...and every evicted or failure-killed KV token is recomputed
+    # through the prefill fleet — the extended conservation law
+    assert (res.evicted_tokens + res.killed_tokens
+            == res.recompute_prefill_tokens)
+    # prefill side: one prompt pass per request that entered the fleet
+    # (shed/rejected never prefill), plus the recompute traffic
+    started = [r for r in reqs
+               if r.req_id not in rejected and r.req_id not in shed]
+    assert res.prefill_tokens == (sum(r.prompt_tokens for r in started)
                                   + res.recompute_prefill_tokens)
     # conservative page bound stays within capacity (up to float round-off
     # at the eviction-crossing instant)
@@ -135,6 +166,146 @@ def test_generate_requests_stream_separation():
     assert arr_a == sorted(arr_a)
     assert [r.req_id for r in a] == list(range(2_000))
     assert arr_a != [r.arrival_min for r in b]
+
+
+def _inj_cfg(seed=1, rate_scale=3_000.0, **kw):
+    """Fault-injected config: hot enough hazard rates that a short trace
+    reliably sees failures, ground-truth stub diagnosis for speed."""
+    kw.setdefault("injector",
+                  FailureInjector(SERVING_TAXONOMY, seed=seed,
+                                  rate_scale=rate_scale))
+    return _cfg(**kw)
+
+
+def test_fault_injection_conservation_and_recovery():
+    """The tentpole end-to-end: §5 failures strike the fleet, diagnosis
+    routes recovery (hardware -> cordon + respawn, transient -> in-place
+    restart), killed residents retry through prefill, and the extended
+    conservation law holds exactly."""
+    reqs = generate_requests(6_000, seed=4, horizon_min=30.0)
+    cfg = _inj_cfg()
+    res = replay_requests(reqs, cfg)
+    assert res.faults_injected > 0
+    # every failure was recovered one way — and with the stub's
+    # ground-truth verdicts, the split matches the taxonomy's cordon flag
+    assert res.respawns + res.inplace_restarts == res.faults_injected
+    assert res.cordoned_nodes > 0 or res.respawns == 0
+    assert res.retries_total > 0        # in-flight residents were killed
+    assert res.killed_tokens > 0
+    _check_conservation(reqs, res, cfg)
+
+
+def test_fault_injection_is_deterministic():
+    reqs_a = generate_requests(4_000, seed=9, horizon_min=20.0)
+    reqs_b = generate_requests(4_000, seed=9, horizon_min=20.0)
+    sa = replay_requests(reqs_a, _inj_cfg(seed=3)).summary()
+    sb = replay_requests(reqs_b, _inj_cfg(seed=3)).summary()
+    assert json.dumps(sa, sort_keys=True) == json.dumps(sb, sort_keys=True)
+
+
+def test_faults_summary_section():
+    """``summary()["faults"]`` attributes per-class; the no-injection
+    summary must not grow the section (schema stability)."""
+    reqs = generate_requests(6_000, seed=4, horizon_min=30.0)
+    s = replay_requests(reqs, _inj_cfg()).summary()
+    faults = s["faults"]
+    assert faults["injected"] > 0
+    by_class = faults["by_class"]
+    assert sum(c["failures"] for c in by_class.values()) == faults["injected"]
+    assert sum(c["retries"] for c in by_class.values()) == faults["retries"]
+    assert sum(c["drops"] for c in by_class.values()) == faults["drops"]
+    for c in by_class.values():
+        assert c["downtime_min"] >= 0.0
+        assert sum(c["verdicts"].values()) == c["failures"]
+    clean = replay_requests(generate_requests(500, seed=4, horizon_min=5.0),
+                            _cfg()).summary()
+    assert "faults" not in clean
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       inj_seed=st.integers(0, 1_000),
+       rate_scale=st.floats(100.0, 20_000.0),
+       n=st.integers(50, 500),
+       kv_pages=st.integers(48, 512),
+       retry_budget=st.integers(0, 4),
+       n_decode=st.integers(1, 4),
+       n_prefill=st.integers(1, 3))
+def test_fault_conservation_property(seed, inj_seed, rate_scale, n, kv_pages,
+                                     retry_budget, n_decode, n_prefill):
+    """Extended conservation law under randomized failure schedules:
+    ``evicted + killed == recomputed`` must hold exactly whatever the
+    taxonomy does to the fleet."""
+    reqs = generate_requests(n, seed=seed, horizon_min=10.0,
+                             max_prompt=512, max_out=64)
+    cfg = _inj_cfg(seed=inj_seed, rate_scale=rate_scale,
+                   n_prefill=n_prefill, n_decode=n_decode,
+                   max_batch=16, kv_pages=kv_pages, page_tokens=16,
+                   admit_headroom_tokens=32, evict_headroom_tokens=64,
+                   retry_budget=retry_budget, total_gpus=256)
+    _check_conservation(reqs, replay_requests(reqs, cfg), cfg)
+
+
+def test_retry_budget_exhaustion_drops():
+    """With a zero retry budget every failure-killed request drops
+    immediately: drops accrue, no retry recompute is ever charged
+    (``killed_tokens`` counts only *retried* kills), and dropped
+    requests' partial decode progress is still conserved."""
+    reqs = generate_requests(6_000, seed=4, horizon_min=30.0)
+    cfg = _inj_cfg(retry_budget=0)
+    res = replay_requests(reqs, cfg)
+    assert res.faults_injected > 0
+    assert len(res.dropped_ids) > 0
+    assert res.retries_total == 0
+    assert res.killed_tokens == 0
+    assert res.evicted_tokens == res.recompute_prefill_tokens
+    _check_conservation(reqs, res, cfg)
+
+
+def test_degraded_shedding_accounts_load():
+    """A tiny degraded shed queue forces load shedding while instances
+    are down; shed requests never touch the prefill fleet."""
+    reqs = generate_requests(6_000, seed=4, horizon_min=30.0)
+    cfg = _inj_cfg(degraded_shed_queue=1, n_decode=2, n_prefill=1,
+                   max_batch=16)
+    res = replay_requests(reqs, cfg)
+    assert res.faults_injected > 0
+    assert len(res.shed_ids) > 0
+    assert res.degraded_min > 0.0
+    _check_conservation(reqs, res, cfg)
+
+
+def test_hol_skip_window():
+    """Satellite: with a KV-starved head blocking the queue, a non-zero
+    ``hol_skip_window`` admits small requests past it; the default stays
+    strict FIFO (zero skips). Both must conserve."""
+    reqs = generate_requests(1_500, seed=3, horizon_min=5.0,
+                             max_prompt=400, max_out=64)
+    base = dict(n_decode=1, n_prefill=1, max_batch=16, kv_pages=96,
+                page_tokens=16, admit_headroom_tokens=32,
+                evict_headroom_tokens=64)
+    cfg_fifo = _cfg(**base)
+    res_fifo = replay_requests(reqs, cfg_fifo)
+    assert res_fifo.hol_skips == 0
+    _check_conservation(reqs, res_fifo, cfg_fifo)
+    reqs2 = generate_requests(1_500, seed=3, horizon_min=5.0,
+                              max_prompt=400, max_out=64)
+    cfg_skip = _cfg(hol_skip_window=8, **base)
+    res_skip = replay_requests(reqs2, cfg_skip)
+    assert res_skip.hol_skips > 0
+    assert all(r.retries == 0 for r in reqs2)
+    _check_conservation(reqs2, res_skip, cfg_skip)
+
+
+def test_fault_config_validation():
+    with pytest.raises(ValueError):
+        replay_requests([], _cfg(retry_budget=-1))
+    with pytest.raises(ValueError):
+        replay_requests([], _cfg(hol_skip_window=-1))
+    with pytest.raises(ValueError):
+        replay_requests([], _cfg(degraded_max_batch_frac=0.0))
+    with pytest.raises(ValueError):
+        replay_requests([], _cfg(degraded_headroom_mult=0.5))
 
 
 def test_slo_and_tails_respond_to_load():

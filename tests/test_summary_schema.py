@@ -11,9 +11,10 @@
 """
 import json
 
-from repro.cluster import (KALOS, ReplayConfig, ServeReplayConfig,
-                           generate_jobs, generate_requests, replay_requests,
-                           replay_trace)
+from repro.cluster import (KALOS, SERVING_TAXONOMY, FailureInjector,
+                           ReplayConfig, ServeReplayConfig, generate_jobs,
+                           generate_requests, replay_requests, replay_trace)
+from repro.core.ft.diagnosis import VERDICT_HARDWARE, VERDICT_TRANSIENT
 from repro.launch.cost_model import CostModel
 
 REPLAY_TOP_KEYS = {
@@ -28,6 +29,19 @@ SERVE_TOP_KEYS = {
     "n_requests", "completed", "rejected", "events_processed",
     "stale_events", "horizon_min", "ttft", "tpot", "slo", "throughput",
     "batch", "kv", "fleet", "cost_model",
+}
+
+# the injected-replay-only "faults" section (README "Result schemas"):
+# top-level scalar counters plus a per-class attribution tree
+FAULTS_KEYS = {
+    "injected", "retries", "drops", "shed", "hol_skips", "killed_tokens",
+    "lost_goodput_tokens", "degraded_min", "respawns", "inplace_restarts",
+    "cordoned_nodes", "by_class",
+}
+FAULTS_CLASS_KEYS = {
+    "failures", "prefill", "decode", "retries", "drops", "shed",
+    "killed_tokens", "lost_goodput_tokens", "slo_ttft_violations",
+    "slo_tpot_violations", "downtime_min", "verdicts",
 }
 
 _SCALARS = (int, float, str, bool, type(None))
@@ -83,9 +97,43 @@ def _clobber(node):
         node.clear()
 
 
+class _StubDiagnosis:
+    def verdict(self, cls):
+        return (VERDICT_HARDWARE if cls.needs_cordon
+                else VERDICT_TRANSIENT), None, None
+
+
+def _serve_faults_result():
+    reqs = generate_requests(3_000, seed=2, horizon_min=10.0)
+    cfg = ServeReplayConfig(
+        cost_model=CostModel.analytic(("internlm-7b",)),
+        injector=FailureInjector(SERVING_TAXONOMY, seed=1,
+                                 rate_scale=3_000.0),
+        diagnosis=_StubDiagnosis())
+    return replay_requests(reqs, cfg)
+
+
 def test_replay_summary_schema():
     _check_contract(_replay_result(), REPLAY_TOP_KEYS)
 
 
 def test_serve_summary_schema():
-    _check_contract(_serve_result(), SERVE_TOP_KEYS)
+    # the no-injection tree must NOT grow the faults section — it is
+    # additive and injection-gated, so existing consumers see no change
+    res = _serve_result()
+    _check_contract(res, SERVE_TOP_KEYS)
+    assert "faults" not in res.summary()
+
+
+def test_serve_faults_summary_schema():
+    """Injected replays grow exactly one additional top-level section,
+    ``"faults"``, holding the per-class §5 attribution tree — same
+    scalar-leaf contract as the rest of the summary."""
+    res = _serve_faults_result()
+    _check_contract(res, SERVE_TOP_KEYS | {"faults"})
+    faults = res.summary()["faults"]
+    assert set(faults) == FAULTS_KEYS
+    assert faults["injected"] > 0
+    for name, cls in faults["by_class"].items():
+        assert isinstance(name, str)
+        assert set(cls) == FAULTS_CLASS_KEYS
